@@ -1,0 +1,38 @@
+"""Splice generated dry-run/roofline tables into EXPERIMENTS.md.
+
+  PYTHONPATH=src:. python -m benchmarks.finalize_experiments
+"""
+
+from __future__ import annotations
+
+import json
+import re
+
+from benchmarks import report
+
+
+def main():
+    results = json.load(open("results/dryrun.json"))
+    text = open("EXPERIMENTS.template.md").read()
+
+    dr = ("### 16x16 pod (256 chips)\n\n"
+          + report.dryrun_table(results, "16x16")
+          + "\n\n### 2x16x16 multi-pod (512 chips)\n\n"
+          + report.dryrun_table(results, "2x16x16"))
+    text = re.sub(r"<!-- DRYRUN_TABLES -->", dr, text)
+
+    rt = report.roofline_table(results)
+    text = re.sub(r"<!-- ROOFLINE_TABLE -->", rt, text)
+
+    try:
+        hc = open("results/hillclimb.md").read()
+    except FileNotFoundError:
+        hc = "(hillclimb log pending)"
+    text = re.sub(r"<!-- HILLCLIMB -->", hc.replace("\\", r"\\"), text)
+
+    open("EXPERIMENTS.md", "w").write(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Render the SS Perf hillclimb log: baseline (dryrun.json) vs variants
+(hillclimb.json) for the three chosen cells.
+
+  PYTHONPATH=src:. python -m benchmarks.hillclimb_report > results/hillclimb.md
+"""
+
+from __future__ import annotations
+
+import json
+
+CELLS = [
+    ("qwen2-vl-2b", "prefill_32k",
+     "worst useful-flops (12 heads unshardable on 16-way TP -> replicated "
+     "attention compute)"),
+    ("kimi-k2-1t-a32b", "train_4k",
+     "most collective-bound (grad all-reduce of 1T f32 + MoE all-to-all)"),
+    ("girih-7pt-var", "grid_1k",
+     "paper-representative (distributed deep-halo wavefront stepping)"),
+]
+
+
+def row(r, tag):
+    coll = sum(r["coll_bytes"].values())
+    return (f"| {tag or 'baseline'} | {r['t_compute']*1e3:.2f} | "
+            f"{r['t_memory']*1e3:.3f} | {r['t_collective']*1e3:.2f} | "
+            f"{r['dominant']} | {r['flops_per_device']:.3e} | "
+            f"{coll/2**30:.2f} GiB |")
+
+
+def main():
+    base = json.load(open("results/dryrun.json"))
+    try:
+        hc = json.load(open("results/hillclimb.json"))
+    except FileNotFoundError:
+        hc = []
+    for arch, shape, why in CELLS:
+        print(f"\n#### {arch} x {shape} (16x16)\n\nChosen because: {why}\n")
+        print("| variant | t_compute ms | t_memory ms | t_coll ms | dominant "
+              "| flops/dev | coll/dev |")
+        print("|---|---|---|---|---|---|---|")
+        for r in base:
+            if (r.get("arch"), r.get("shape"), r.get("mesh")) == \
+                    (arch, shape, "16x16") and "t_compute" in r:
+                print(row(r, "baseline"))
+        for r in hc:
+            if (r.get("arch"), r.get("shape"), r.get("mesh")) == \
+                    (arch, shape, "16x16") and "t_compute" in r:
+                print(row(r, r.get("tag", "?")))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,123 @@
+"""Render EXPERIMENTS.md SS Dry-run / SS Roofline tables from
+results/dryrun.json.
+
+  PYTHONPATH=src:. python -m benchmarks.report results/dryrun.json
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def _fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit, div in (("TiB", 2**40), ("GiB", 2**30), ("MiB", 2**20),
+                      ("KiB", 2**10)):
+        if b >= div:
+            return f"{b/div:.2f}{unit}"
+    return f"{b:.0f}B"
+
+
+def _ms(s):
+    return f"{s*1e3:.2f}" if s is not None else "-"
+
+
+def dryrun_table(results, mesh):
+    rows = []
+    hdr = ("| arch | shape | status | flops/dev | HLO B/dev | model B/dev | "
+           "coll B/dev | args/dev | temp/dev | compile s |")
+    sep = "|" + "---|" * 10
+    rows.append(hdr)
+    rows.append(sep)
+    for r in results:
+        if r.get("mesh") != mesh:
+            continue
+        if "skip" in r:
+            rows.append(f"| {r['arch']} | {r['shape']} | SKIP: {r['skip']} "
+                        + "| - " * 7 + "|")
+            continue
+        if "error" in r:
+            rows.append(f"| {r['arch']} | {r['shape']} | "
+                        f"ERROR: {r['error'][:60]} " + "| - " * 7 + "|")
+            continue
+        coll = sum(r["coll_bytes"].values())
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | ok | "
+            f"{r['flops_per_device']:.2e} | "
+            f"{_fmt_bytes(r['bytes_per_device'])} | "
+            f"{_fmt_bytes(r['model_bytes_per_device'])} | "
+            f"{_fmt_bytes(coll)} | "
+            f"{_fmt_bytes(r['arg_bytes_per_device'])} | "
+            f"{_fmt_bytes(r['peak_bytes_per_device'] - r['arg_bytes_per_device'])} | "
+            f"{r['lower_s'] + r['compile_s']:.0f} |")
+    return "\n".join(rows)
+
+
+def roofline_table(results, mesh="16x16"):
+    rows = []
+    rows.append("| arch | shape | t_compute ms | t_memory ms | t_coll ms | "
+                "dominant | MODEL_FLOPS | useful | bottleneck note |")
+    rows.append("|" + "---|" * 9)
+    for r in results:
+        if r.get("mesh") != mesh or "skip" in r or "error" in r:
+            continue
+        note = bottleneck_note(r)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {_ms(r['t_compute'])} | "
+            f"{_ms(r['t_memory'])} | {_ms(r['t_collective'])} | "
+            f"**{r['dominant']}** | {r['model_flops_global']:.2e} | "
+            f"{r['useful_flops_ratio']:.2f} | {note} |")
+    return "\n".join(rows)
+
+
+def bottleneck_note(r) -> str:
+    d = r["dominant"]
+    coll = r["coll_bytes"]
+    if d == "collective":
+        top = max(coll, key=coll.get)
+        if top == "all-reduce":
+            return ("grad/activation all-reduce dominates: reduce-scatter "
+                    "rewrite or pod-compression moves it down")
+        if top == "all-to-all":
+            return "MoE dispatch all-to-all: larger capacity grouping helps"
+        return f"{top}-bound: overlap with compute / deeper halos"
+    if d == "memory":
+        return ("HBM streaming bound: raise arithmetic intensity "
+                "(temporal blocking / bigger microbatch)")
+    return "compute-bound: already at the MXU roof; fuse or quantize"
+
+
+def candidates(results, mesh="16x16"):
+    """The three hillclimb cells: worst roofline fraction, most
+    collective-bound, most paper-representative (girih)."""
+    ok = [r for r in results if r.get("mesh") == mesh and "t_compute" in r]
+    lm = [r for r in ok if not r["arch"].startswith("girih-")]
+    worst = min(lm, key=lambda r: r["useful_flops_ratio"])
+    collb = max(lm, key=lambda r: (r["t_collective"] /
+                                   max(r["t_compute"], r["t_memory"], 1e-12)))
+    girih = [r for r in ok if r["arch"].startswith("girih-")]
+    rep = max(girih, key=lambda r: r["t_collective"]) if girih else None
+    return worst, collb, rep
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun.json"
+    results = json.load(open(path))
+    print("## Dry-run (16x16 pod)\n")
+    print(dryrun_table(results, "16x16"))
+    print("\n## Dry-run (2x16x16 multi-pod)\n")
+    print(dryrun_table(results, "2x16x16"))
+    print("\n## Roofline (single-pod, per brief)\n")
+    print(roofline_table(results))
+    w, c, g = candidates(results)
+    print("\n## Hillclimb candidates\n")
+    print(f"- worst useful-flops: {w['arch']} x {w['shape']}")
+    print(f"- most collective-bound: {c['arch']} x {c['shape']}")
+    if g:
+        print(f"- paper-representative: {g['arch']} x {g['shape']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,179 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Wall-clock numbers are CPU
+(jnp executors, small grids — sanity scale only); the v5e columns are the
+analytic models the roofline/§Perf analysis is based on (this container has
+no TPU). Figure mapping:
+
+  fig4_code_balance   Fig. 4  (VMEM block size & code balance, model vs
+                               exact kernel DMA traffic)
+  table_ecm           Tables I/II (ECM-TPU predictions per stencil)
+  fig8_15_perf        Figs. 8-15 (method x grid size: naive/spatial/GZ/MWD)
+  fig16_18_groupsize  Figs. 16-18 (device-group size vs traffic/energy)
+  fig19_energy        Fig. 19 (energy vs code balance)
+  autotune_bench      Fig. 7 (auto-tuner convergence)
+  lm_substrate        microbenches of the LM substrate layers
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import traffic
+from repro import hw
+from repro.core import autotune, models, mwd, stencils as st
+from repro.core.mwd import MWDPlan
+
+
+def _t(fn, *args, reps=3, **kw):
+    fn(*args, **kw)  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def _row(name, us, derived):
+    print(f"{name},{us:.1f},{derived}")
+
+
+def fig4_code_balance():
+    """Model (Eq. 3/5) vs exact kernel-DMA code balance across D_w."""
+    grid = (128, 128, 128)
+    for name, spec in st.SPECS.items():
+        step = 2 * spec.radius
+        for d_w in [step * k for k in (1, 2, 4, 8, 16)]:
+            n_xb = grid[2] * 4 * spec.bytes_per_cell
+            cs = models.cache_block_bytes(spec, d_w, 2, n_xb)
+            bc_model = models.code_balance(spec, d_w, 4)
+            got = traffic.mwd_pass_traffic(spec, grid, d_w, min(2, d_w))
+            _row(f"fig4.{name}.dw{d_w}", 0.0,
+                 f"block_KiB={cs/1024:.0f};Bc_model={bc_model:.2f};"
+                 f"Bc_kernel={got['code_balance']:.2f}")
+
+
+def table_ecm():
+    """ECM-TPU model predictions (Tables I/II analog) at tuned D_w."""
+    grid = (512, 512, 512)
+    for name, spec in st.SPECS.items():
+        res = autotune.autotune(spec, grid, devices_x=1)
+        bc = models.code_balance(spec, res.plan.d_w, 4)
+        pred = models.ecm_predict(spec, bc, float(np.prod(grid)))
+        spat = models.ecm_predict(spec, models.spatial_code_balance(spec, 4),
+                                  float(np.prod(grid)))
+        _row(f"ecm.{name}", 0.0,
+             f"dw={res.plan.d_w};Bc={bc:.2f}B/LUP;"
+             f"pred_GLUPs={pred.glups:.1f};spatial_GLUPs={spat.glups:.1f};"
+             f"speedup={pred.glups/spat.glups:.2f}x")
+
+
+def fig8_15_perf(sizes=(48, 64)):
+    """CPU wall-clock of the jnp executors + modeled v5e GLUP/s."""
+    t_steps = 4
+    for name, spec in st.SPECS.items():
+        for n in sizes:
+            shape = (n, n, n)
+            state, coeffs = st.make_problem(spec, shape, seed=0)
+            lups = float(np.prod(shape)) * t_steps
+
+            us = _t(lambda: jax.block_until_ready(
+                st.run_naive(spec, state, coeffs, t_steps)), reps=1)
+            _row(f"perf.{name}.naive.{n}", us,
+                 f"cpu_GLUPs={lups/us/1e3:.3f}")
+
+            d_w = 8 if spec.radius == 1 else 16
+            us2 = _t(lambda: jax.block_until_ready(
+                mwd.run_mwd(spec, state, coeffs, t_steps,
+                            MWDPlan(d_w=d_w))), reps=1)
+            bc = models.code_balance(spec, d_w, 4)
+            v5e = models.ecm_predict(spec, bc, lups).glups
+            _row(f"perf.{name}.mwd.{n}", us2,
+                 f"cpu_GLUPs={lups/us2/1e3:.3f};v5e_model_GLUPs={v5e:.1f}")
+
+
+def fig16_18_groupsize():
+    """Device-group size (tg_x): bandwidth/energy per LUP trade-off."""
+    grid = (1024, 1024, 1024)
+    for name in ("7pt-const", "25pt-var"):
+        spec = st.SPECS[name]
+        for tg in (1, 2, 4, 8, 16):
+            score = autotune.model_score(spec, grid)(
+                MWDPlan(d_w=32 if spec.radius == 1 else 32, n_f=2, tg_x=tg))
+            n_xb = grid[2] // tg * 4 * spec.bytes_per_cell
+            fits = models.vmem_fits(spec, 32, 2, n_xb)
+            _row(f"groupsize.{name}.tg{tg}", 0.0,
+                 f"model_GLUPs_dev={score:.1f};vmem_fits_dw32={fits}")
+
+
+def fig19_energy():
+    """Energy vs code balance at varying D_w (Fig. 19 analog)."""
+    grid = (512, 512, 512)
+    lups = float(np.prod(grid))
+    for name, spec in st.SPECS.items():
+        step = 2 * spec.radius
+        for d_w in (step * 2, step * 8, step * 32):
+            bc = models.code_balance(spec, d_w, 4)
+            pred = models.ecm_predict(spec, bc, lups)
+            e = models.energy(spec.flops_per_lup * lups, bc * lups,
+                              pred.t_total)
+            _row(f"energy.{name}.dw{d_w}", 0.0,
+                 f"Bc={bc:.1f};core_J={e.core_j:.2f};hbm_J={e.hbm_j:.2f};"
+                 f"total_J={e.total_j:.2f};pJ_per_LUP={e.total_j/lups*1e12:.1f}")
+
+
+def autotune_bench():
+    t0 = time.perf_counter()
+    for name, spec in st.SPECS.items():
+        res = autotune.autotune(spec, (512, 512, 512), devices_x=16)
+        _row(f"autotune.{name}", (time.perf_counter() - t0) * 1e6,
+             f"plan=dw{res.plan.d_w}.nf{res.plan.n_f}.tg{res.plan.tg_x};"
+             f"score={res.score:.1f};evals={len(res.evaluated)}")
+
+
+def lm_substrate():
+    from repro import configs
+    from repro.models import lm
+    from repro.models.params import tree_init
+    from repro.training import steps as tsteps
+
+    for arch in ("llama3.2-1b", "mamba2-130m", "mixtral-8x7b"):
+        cfg = configs.reduced(configs.get(arch), n_layers=2, d_model=64)
+        params = tree_init(lm.param_specs(cfg), seed=0)
+        toks = jnp.zeros((2, 64), jnp.int32)
+        batch = {"tokens": toks, "labels": toks}
+        _, train = tsteps.make_train_step(cfg, chunk=32)
+        state = {"params": params, "opt": tsteps.make_optimizer(
+            cfg.optimizer).init(params), "step": jnp.zeros((), jnp.int32)}
+        jtrain = jax.jit(train)
+        us = _t(lambda: jax.block_until_ready(jtrain(state, batch)[1]["loss"]))
+        _row(f"lm.train_step.{arch}", us, "reduced_cfg_2L_d64")
+
+
+BENCHES = {
+    "fig4_code_balance": fig4_code_balance,
+    "table_ecm": table_ecm,
+    "fig8_15_perf": fig8_15_perf,
+    "fig16_18_groupsize": fig16_18_groupsize,
+    "fig19_energy": fig19_energy,
+    "autotune_bench": autotune_bench,
+    "lm_substrate": lm_substrate,
+}
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for name, fn in BENCHES.items():
+        if only and only not in name:
+            continue
+        fn()
+
+
+if __name__ == "__main__":
+    main()

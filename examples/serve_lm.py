@@ -1,0 +1,15 @@
+"""Serve a small model with batched requests (end-to-end serving driver).
+
+Builds a reduced llama3.2-style model, prefills a batch of prompts, then
+decodes with the KV cache, printing per-phase throughput. Swap --arch for any
+registered architecture (mamba2-130m serves from O(1) SSM state).
+
+  PYTHONPATH=src python examples/serve_lm.py --arch llama3.2-1b --gen 48
+"""
+
+import sys
+
+from repro.launch import serve
+
+if __name__ == "__main__":
+    serve.main(sys.argv[1:])

@@ -1,0 +1,12 @@
+"""Train a small LM end-to-end with checkpoint/resume (training driver).
+
+  PYTHONPATH=src python examples/train_lm.py --arch mixtral-8x7b --steps 30
+(reduced same-family config; use --full --arch ... on a real pod slice)
+"""
+
+import sys
+
+from repro.launch import train
+
+if __name__ == "__main__":
+    train.main(sys.argv[1:])

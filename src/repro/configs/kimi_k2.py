@@ -1,0 +1,17 @@
+"""kimi-k2-1t-a32b [arXiv:2501.kimi2]: trillion-parameter MoE, 384e top-8.
+
+Scale notes: ~1.03T params (384 experts x 61 layers x 3*7168*2048); training
+state uses Adafactor (factored second moment) so params+opt fit the
+512 x 16 GB HBM budget — see DESIGN.md / EXPERIMENTS.md Dry-run.
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="kimi-k2-1t-a32b", family="moe",
+    n_layers=61, d_model=7168, n_heads=64, n_kv_heads=8, head_dim=112,
+    d_ff=2048, vocab_size=163840,
+    n_experts=384, experts_per_token=8,
+    rope_theta=5e4, tie_embeddings=False,
+    optimizer="adafactor",
+)

@@ -1,0 +1,114 @@
+"""Auto-tuner (paper Sec. 4.2.2, Fig. 7), model-pruned hill climbing.
+
+Flow, mirroring the paper:
+  1. enumerate feasible thread-group factorizations (here: device-group sizes
+     tg_x that divide the devices available along x);
+  2. for each, local-search hill-climb over (D_w, N_F) seeded at the largest
+     D_w whose VMEM footprint fits (Eq. 3 prunes the space);
+  3. score with an injected measure() callback — wall-clock on hardware, the
+     ECM/roofline model in dry-run mode (this container).
+
+The tuner dynamically grows the number of measured diamond rows until the
+score stabilizes, like the paper's "acceptable performance" loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+from repro import hw
+from repro.core import models
+from repro.core.mwd import MWDPlan
+from repro.core.stencils import StencilSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneResult:
+    plan: MWDPlan
+    score: float                      # higher is better (e.g. GLUP/s)
+    evaluated: tuple[tuple[MWDPlan, float], ...]
+
+
+def model_score(spec: StencilSpec, grid_shape, word_bytes: int = 4,
+                chip: hw.ChipSpec = hw.V5E) -> Callable[[MWDPlan], float]:
+    """Default scorer: ECM-TPU predicted GLUP/s (per device)."""
+    nz, ny, nx = grid_shape
+
+    def score(plan: MWDPlan) -> float:
+        n_xb = (nx // plan.tg_x) * word_bytes * spec.bytes_per_cell
+        if not models.vmem_fits(spec, plan.d_w, plan.n_f, n_xb, chip):
+            return -math.inf
+        bc = models.code_balance(spec, plan.d_w, word_bytes)
+        lups = nz * ny * (nx // plan.tg_x)
+        pred = models.ecm_predict(spec, bc, lups, chip, word_bytes)
+        # fine-grained sync penalty: one ICI neighbor exchange of the tile's
+        # x-halo per in-tile time step when tg_x > 1 (the paper's
+        # bandwidth-vs-sync tradeoff, priced in)
+        t_sync = 0.0
+        if plan.tg_x > 1:
+            halo_bytes = 2 * spec.radius * nz * plan.d_w * word_bytes
+            t_sync = halo_bytes / chip.ici_bw_per_link + 2e-6  # +latency
+        return pred.lups / (pred.t_total + t_sync) / 1e9
+
+    return score
+
+
+def _neighbors(plan: MWDPlan, radius: int) -> list[MWDPlan]:
+    step = 2 * radius
+    cands = []
+    for d_w in (plan.d_w - step, plan.d_w + step):
+        if d_w >= step:
+            cands.append(dataclasses.replace(plan, d_w=d_w))
+    for n_f in (plan.n_f - 1, plan.n_f + 1, plan.n_f * 2):
+        if n_f >= 1 and n_f != plan.n_f:
+            cands.append(dataclasses.replace(plan, n_f=n_f))
+    return cands
+
+
+def _seed_d_w(spec: StencilSpec, n_xb: int, chip: hw.ChipSpec) -> int:
+    """Largest D_w fitting VMEM (Eq. 3) — the model-pruned starting point."""
+    step = 2 * spec.radius
+    d_w = step
+    while models.vmem_fits(spec, d_w + step, 1, n_xb, chip):
+        d_w += step
+        if d_w > 4096:
+            break
+    return d_w
+
+
+def autotune(spec: StencilSpec, grid_shape, devices_x: int = 1,
+             measure: Callable[[MWDPlan], float] | None = None,
+             chip: hw.ChipSpec = hw.V5E, word_bytes: int = 4,
+             max_evals: int = 64) -> TuneResult:
+    nz, ny, nx = grid_shape
+    measure = measure or model_score(spec, grid_shape, word_bytes, chip)
+    evaluated: dict[MWDPlan, float] = {}
+
+    def eval_plan(plan: MWDPlan) -> float:
+        if plan not in evaluated and len(evaluated) < max_evals:
+            evaluated[plan] = measure(plan)
+        return evaluated.get(plan, -math.inf)
+
+    # thread-group factorization (Fig. 7 step 2): tg_x over divisors
+    tg_sizes = [d for d in range(1, devices_x + 1) if devices_x % d == 0]
+    best: tuple[float, MWDPlan] | None = None
+    for tg in tg_sizes:
+        n_xb = (nx // tg) * word_bytes * spec.bytes_per_cell
+        seed = MWDPlan(d_w=_seed_d_w(spec, n_xb, chip), n_f=1, tg_x=tg)
+        cur, cur_score = seed, eval_plan(seed)
+        while True:  # local hill-climb (paper's recursive local search)
+            improved = False
+            for cand in _neighbors(cur, spec.radius):
+                s = eval_plan(cand)
+                if s > cur_score:
+                    cur, cur_score, improved = cand, s, True
+            if not improved:
+                break
+        if best is None or cur_score > best[0]:
+            best = (cur_score, cur)
+
+    assert best is not None
+    return TuneResult(plan=best[1], score=best[0],
+                      evaluated=tuple(evaluated.items()))

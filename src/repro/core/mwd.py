@@ -1,0 +1,114 @@
+"""MWD executor: runs the diamond space-time schedule in JAX.
+
+This is the semantic core of the reproduction: it advances a stencil problem
+T steps by walking the diamond tessellation in dependency order, updating each
+tile span with the two-buffer parity scheme the paper realizes via pointer
+swapping. The result is numerically equivalent to T naive sweeps (tested).
+
+Buffer parity: the value of cell y at time t lives in buffers[t % 2]; an
+update (t -> t+1, rows [y0,y1)) reads buffers[t%2] (and buffers[(t+1)%2] as
+the t-1 level for 2nd-order-in-time stencils) and overwrites rows [y0,y1) of
+buffers[(t+1)%2], whose old content (time t-1) is dead by the dependency
+order. This is why diamond tiling needs no extra storage (paper Sec. 2.1.2).
+
+The z-wavefront is a locality device, not a semantic one, so this executor
+updates the full z extent per span; the Pallas kernels (repro.kernels) realize
+the wavefront/VMEM pipeline and are validated against this oracle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import stencils as st
+from repro.core import tiling
+
+
+@dataclasses.dataclass(frozen=True)
+class MWDPlan:
+    """Tunable parameters of one MWD configuration (the auto-tuner's domain).
+
+    The paper's thread-group (T_x, T_y, T_z) becomes:
+      * in-kernel lane/sublane mapping (fixed by hardware), and
+      * tg_x: devices cooperatively sharing one tile along x (cache-block
+        sharing across devices; 1 = the 1WD-like private-tile limit).
+    """
+
+    d_w: int = 8          # diamond width along y (multiple of 2R)
+    n_f: int = 1          # wavefront slab thickness along z
+    t_block: int = 0      # fused time steps for the ghost-zone kernel (0=off)
+    tg_x: int = 1         # devices sharing a tile along x
+    block_x: int = 0      # 0 = never tile x (paper's leading-dimension rule)
+
+    def wavefront(self, radius: int) -> tiling.WavefrontPlan:
+        t_b = self.d_w // (2 * radius)  # diamond half-height
+        return tiling.WavefrontPlan(d_w=self.d_w, radius=radius,
+                                    n_f=self.n_f, t_block=t_b)
+
+
+@partial(jax.jit, static_argnames=("spec", "y0", "y1", "t_parity"))
+def _span_update(spec: st.StencilSpec, buf0, buf1, coeffs,
+                 y0: int, y1: int, t_parity: int):
+    """Update rows [y0, y1) one step; returns the written buffer's new value."""
+    r = spec.radius
+    cur = (buf0, buf1)[t_parity]
+    dst = (buf0, buf1)[1 - t_parity]
+    sl = (slice(None), slice(y0 - r, y1 + r), slice(None))
+    sub_cur = cur[sl]
+    sub_prev = dst[sl]
+    if spec.name == "25pt-const":
+        c_arr, c_vec = coeffs
+        sub_coeffs = (c_arr[sl], c_vec)
+    elif spec.n_coeff_arrays > 0:
+        sub_coeffs = coeffs[(slice(None),) + sl]
+    else:
+        sub_coeffs = coeffs
+    new_sub = st.sweep_fn(spec)(sub_cur, sub_prev, sub_coeffs)
+    return dst.at[:, y0:y1, :].set(new_sub[:, r:-r, :])
+
+
+def run_mwd(spec: st.StencilSpec, state, coeffs, n_steps: int,
+            plan: MWDPlan):
+    """Advance `n_steps` via the diamond schedule; returns (cur, prev)."""
+    cur, prev = state
+    ny = cur.shape[1]
+    r = spec.radius
+    # Dirichlet frame: boundary values are cur's for every time level. The
+    # naive sweep propagates cur's frame into each new level; the diamond
+    # executor never writes the frame of the odd buffer, so sync it up front.
+    for ax in range(3):
+        lo = tuple(slice(None) if a != ax else slice(0, r) for a in range(3))
+        hi = tuple(slice(None) if a != ax else slice(-r, None) for a in range(3))
+        prev = prev.at[lo].set(cur[lo]).at[hi].set(cur[hi])
+    sched = tiling.make_diamond_schedule(plan.d_w, r, n_steps,
+                                         y_lo=r, y_hi=ny - r)
+    # buffers[p] holds values of time levels with parity p
+    bufs = [cur, prev]  # t=0 is even -> bufs[0]; prev is the t=-1 (odd) level
+    for row in sched.rows:
+        for tile in row:
+            for (t, y0, y1) in tile.spans:
+                p = t % 2
+                bufs[1 - p] = _span_update(spec, bufs[0], bufs[1], coeffs,
+                                           y0, y1, p)
+    p = n_steps % 2
+    return bufs[p], bufs[1 - p]
+
+
+def run_naive(spec: st.StencilSpec, state, coeffs, n_steps: int):
+    return st.run_naive(spec, state, coeffs, n_steps)
+
+
+def traffic_per_pass(spec: st.StencilSpec, plan: MWDPlan, grid_shape,
+                     word_bytes: int = 4) -> dict:
+    """Modeled HBM traffic of one diamond pass over the grid (Eq. 5 terms)."""
+    from repro.core import models
+    nz, ny, nx = grid_shape
+    t_pass = plan.d_w // (2 * spec.radius)  # steps advanced per pass
+    lups = nz * ny * nx * t_pass
+    bc = models.code_balance(spec, plan.d_w, word_bytes)
+    return {"lups": lups, "bytes": bc * lups, "code_balance": bc,
+            "steps": t_pass}

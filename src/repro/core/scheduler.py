@@ -1,0 +1,123 @@
+"""Dynamic tile scheduler (paper Sec. 4.2.3).
+
+A multi-producer multi-consumer FIFO of ready tiles: when a thread group
+finishes a tile it pushes any dependents whose last unmet dependency it was.
+This gives dynamic load balancing across device groups (the paper's answer to
+MPI-boundary imbalance; here: straggler mitigation — a slow group never stalls
+the queue, others keep draining it).
+
+The scheduler is host-side and generic over the work executor, so it drives
+(a) the CPU jnp executor in tests, (b) per-device-group dispatch in the
+distributed stepper, and (c) async checkpoint workers.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+from typing import Callable, Hashable, Iterable, Mapping, Sequence
+
+
+@dataclasses.dataclass
+class TileGraph:
+    """Dependency DAG over hashable tile keys."""
+
+    deps: Mapping[Hashable, Sequence[Hashable]]
+
+    def validate(self) -> None:
+        for k, ds in self.deps.items():
+            for d in ds:
+                if d not in self.deps:
+                    raise ValueError(f"tile {k} depends on unknown {d}")
+
+
+def from_diamond_schedule(sched) -> TileGraph:
+    deps = {}
+    for tile in sched.tiles():
+        deps[(tile.row, tile.col)] = tuple(sched.dependencies(tile))
+    return TileGraph(deps)
+
+
+class FifoScheduler:
+    """Dependency-respecting FIFO; thread-safe pop/complete (critical region)."""
+
+    def __init__(self, graph: TileGraph):
+        graph.validate()
+        self._lock = threading.Lock()
+        self._remaining = {k: len(ds) for k, ds in graph.deps.items()}
+        self._dependents: dict[Hashable, list[Hashable]] = collections.defaultdict(list)
+        for k, ds in graph.deps.items():
+            for d in ds:
+                self._dependents[d].append(k)
+        self._queue = collections.deque(
+            k for k, n in self._remaining.items() if n == 0)
+        self._done: set[Hashable] = set()
+        self._total = len(graph.deps)
+
+    def pop(self):
+        """Next ready tile or None (None while deps pending => caller spins)."""
+        with self._lock:
+            if self._queue:
+                return self._queue.popleft()
+            return None
+
+    def complete(self, key: Hashable) -> None:
+        with self._lock:
+            self._done.add(key)
+            for dep in self._dependents.get(key, ()):  # push newly-ready tiles
+                self._remaining[dep] -= 1
+                if self._remaining[dep] == 0:
+                    self._queue.append(dep)
+
+    @property
+    def finished(self) -> bool:
+        with self._lock:
+            return len(self._done) == self._total
+
+    def run(self, execute: Callable[[Hashable], None], n_workers: int = 1,
+            name: str = "tg") -> list[list[Hashable]]:
+        """Drain the graph with `n_workers` thread groups; returns per-worker
+        execution logs (order of tiles each worker ran)."""
+        logs: list[list[Hashable]] = [[] for _ in range(n_workers)]
+        errors: list[BaseException] = []
+
+        def worker(i: int) -> None:
+            while not self.finished:
+                key = self.pop()
+                if key is None:
+                    if self.finished:
+                        return
+                    threading.Event().wait(0.0005)
+                    continue
+                try:
+                    execute(key)
+                except BaseException as e:  # propagate to caller
+                    errors.append(e)
+                    self._done.update(self._remaining)  # unblock everyone
+                    return
+                logs[i].append(key)
+                self.complete(key)
+
+        threads = [threading.Thread(target=worker, args=(i,), name=f"{name}{i}")
+                   for i in range(n_workers)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        if errors:
+            raise errors[0]
+        return logs
+
+
+def topological_order(graph: TileGraph) -> list[Hashable]:
+    """Kahn's algorithm; raises on cycles. Used by the static (fallback) path."""
+    sched = FifoScheduler(graph)
+    order = []
+    while not sched.finished:
+        k = sched.pop()
+        if k is None:
+            raise ValueError("cycle in tile graph")
+        order.append(k)
+        sched.complete(k)
+    return order

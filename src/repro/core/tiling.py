@@ -1,0 +1,164 @@
+"""Diamond + wavefront space-time tiling (paper Figs. 2, 3, 6).
+
+Diamond tiling is along y; wavefront blocking is along z; the leading
+dimension x is never tiled (paper Sec. 4.1). This module computes the exact
+(t, y) tessellation, tile dependencies, and the wavefront geometry; it is pure
+Python/NumPy (static schedules), consumed by the executors and the scheduler.
+
+Geometry (half-open intervals, slope R):
+  Row r of diamonds is centered at time t_r = r*H with H = D_w/(2R) steps
+  (the half-diamond height). For a global time t in [t_r, t_{r+1}) with
+  offset tau = t - t_r:
+    * contracting diamonds (row r,   centers y = (k + (r%2)/2)*D_w)
+        cover [y_c - (D_w/2 - R*tau), y_c + (D_w/2 - R*tau))
+    * expanding diamonds  (row r+1, centers offset by D_w/2)
+        cover [y_c' - R*tau, y_c' + R*tau)
+  which partitions the y line exactly at every t (tessellation property,
+  verified by hypothesis tests).
+
+A "tile" below is one diamond clipped to the domain [0,T) x [y_lo,y_hi):
+it lists, per time step, the half-open y-interval it updates.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+
+@dataclasses.dataclass(frozen=True)
+class DiamondTile:
+    row: int                  # diamond row index r (center time = r*H)
+    col: int                  # diamond index along y within the row
+    # spans[i] = (t, y_start, y_end) for consecutive time steps
+    spans: tuple[tuple[int, int, int], ...]
+
+    @property
+    def n_lups_per_x(self) -> int:
+        return sum(e - s for _, s, e in self.spans)
+
+    @property
+    def t_range(self) -> tuple[int, int]:
+        ts = [t for t, _, _ in self.spans]
+        return min(ts), max(ts) + 1
+
+    @property
+    def y_range(self) -> tuple[int, int]:
+        return (min(s for _, s, _ in self.spans),
+                max(e for _, _, e in self.spans))
+
+
+@dataclasses.dataclass(frozen=True)
+class DiamondSchedule:
+    """Complete diamond tessellation of [0,T) x [y_lo,y_hi)."""
+
+    d_w: int                  # diamond width (y extent), multiple of 2R
+    radius: int               # stencil radius R
+    t_total: int
+    y_lo: int
+    y_hi: int
+    rows: tuple[tuple[DiamondTile, ...], ...]   # rows in dependency order
+
+    @property
+    def half_height(self) -> int:
+        return self.d_w // (2 * self.radius)
+
+    def tiles(self) -> Iterator[DiamondTile]:
+        for row in self.rows:
+            yield from row
+
+    def dependencies(self, tile: DiamondTile) -> list[tuple[int, int]]:
+        """(row, col) keys of tiles that must complete before `tile` starts.
+
+        A diamond depends on the (up to two) diamonds of the previous row
+        whose y-extent overlaps its own, extended by R (the stencil reach).
+        """
+        if tile.row == 0:
+            return []
+        prev = {t.col: t for t in self.rows_by_index().get(tile.row - 1, ())}
+        lo, hi = tile.y_range
+        lo, hi = lo - self.radius, hi + self.radius
+        deps = []
+        for t in prev.values():
+            plo, phi = t.y_range
+            if plo < hi and lo < phi:
+                deps.append((t.row, t.col))
+        return deps
+
+    def rows_by_index(self) -> dict[int, tuple[DiamondTile, ...]]:
+        return {row[0].row: row for row in self.rows if row}
+
+
+def _diamond_spans(row: int, col: int, d_w: int, radius: int,
+                   t_total: int, y_lo: int, y_hi: int):
+    """Half-open (t, y0, y1) spans of diamond (row, col), domain-clipped."""
+    h = d_w // (2 * radius)
+    t_c = row * h
+    y_c2 = 2 * col * d_w + (d_w if row % 2 else 0) + 2 * y_lo  # 2*center
+    spans = []
+    for t in range(max(0, t_c - h), min(t_total, t_c + h)):
+        tau = t - t_c  # in [-h, h)
+        if tau < 0:
+            # expanding: width grows from 0; at offset tau'=t-(t_c-h) from the
+            # base, halfwidth = R*tau' = R*(tau+h)
+            w2 = 2 * radius * (tau + h)          # 2*halfwidth
+        else:
+            w2 = d_w - 2 * radius * tau          # contracting
+        if w2 <= 0:
+            continue
+        y0 = max(y_lo, (y_c2 - w2) // 2)
+        y1 = min(y_hi, (y_c2 + w2) // 2)
+        if y1 > y0:
+            spans.append((t, y0, y1))
+    return tuple(spans)
+
+
+def make_diamond_schedule(d_w: int, radius: int, t_total: int,
+                          y_lo: int, y_hi: int) -> DiamondSchedule:
+    if d_w % (2 * radius) != 0:
+        raise ValueError(f"d_w={d_w} must be a multiple of 2R={2*radius}")
+    h = d_w // (2 * radius)
+    n_rows = (t_total + h - 1) // h + 1
+    ny = y_hi - y_lo
+    rows = []
+    for r in range(n_rows):
+        row_tiles = []
+        # columns whose diamond [y_c - d_w/2, y_c + d_w/2) intersects domain
+        first_col = -1 if r % 2 else -1
+        last_col = ny // d_w + 1
+        for k in range(first_col, last_col + 1):
+            spans = _diamond_spans(r, k, d_w, radius, t_total, y_lo, y_hi)
+            if spans:
+                row_tiles.append(DiamondTile(row=r, col=k, spans=spans))
+        if row_tiles:
+            rows.append(tuple(row_tiles))
+    return DiamondSchedule(d_w=d_w, radius=radius, t_total=t_total,
+                           y_lo=y_lo, y_hi=y_hi, rows=tuple(rows))
+
+
+# ---------------------------------------------------------------------------
+# Wavefront geometry (paper Sec. 3.3)
+# ---------------------------------------------------------------------------
+
+def wavefront_width(d_w: int, radius: int, n_f: int) -> int:
+    """W_w = D_w - 2R + N_F (reduces to D_w + N_F - 2 at R=1)."""
+    return d_w - 2 * radius + n_f
+
+
+@dataclasses.dataclass(frozen=True)
+class WavefrontPlan:
+    """Geometry of the extruded-diamond wavefront along z (Fig. 3/6).
+
+    The extruded diamond advances through z; each in-tile time step is offset
+    by -R in z relative to the previous, so T_b in-tile steps need a live
+    z working-set of n_f + R*(T_b-1) slabs in fast memory.
+    """
+
+    d_w: int
+    radius: int
+    n_f: int                  # wavefront tile width along z (slab thickness)
+    t_block: int              # time steps blocked inside the wavefront
+
+    @property
+    def z_working_set(self) -> int:
+        return self.n_f + self.radius * (self.t_block - 1)

@@ -1,0 +1,84 @@
+"""Elastic rescale + slice health tracking.
+
+The checkpoint format is mesh-agnostic (full logical arrays), so elasticity
+reduces to: detect a changed device set -> rebuild the mesh -> restore the
+latest checkpoint with shardings for the new mesh -> rebuild the jitted step.
+
+`plan_mesh` degrades gracefully: it returns the largest production-shaped
+mesh the healthy device set supports (2 pods -> 1 pod -> debug shapes), which
+is what the launcher uses after a pod drops. `HealthMonitor` is the host-side
+heartbeat registry the launcher polls; on real clusters the heartbeats come
+from per-slice agents, here tests drive it directly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+
+from repro.launch import mesh as mesh_lib
+
+
+def plan_mesh(n_devices: int) -> tuple[tuple[int, ...], tuple[str, ...]]:
+    """Largest supported mesh for the healthy device count."""
+    if n_devices >= 512:
+        return (2, 16, 16), ("pod", "data", "model")
+    if n_devices >= 256:
+        return (16, 16), ("data", "model")
+    # degraded/debug shapes: keep 'model' as the minor axis
+    for model in (16, 8, 4, 2, 1):
+        if n_devices % model == 0 and n_devices >= model:
+            return (n_devices // model, model), ("data", "model")
+    return (n_devices, 1), ("data", "model")
+
+
+def build_mesh(n_devices: int | None = None) -> jax.sharding.Mesh:
+    n = n_devices if n_devices is not None else len(jax.devices())
+    shape, axes = plan_mesh(n)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+@dataclasses.dataclass
+class HealthMonitor:
+    """Heartbeat registry with a deadline; launcher polls healthy_slices()."""
+
+    slices: tuple[str, ...]
+    timeout_s: float = 60.0
+    clock: Callable[[], float] = time.monotonic
+
+    def __post_init__(self):
+        now = self.clock()
+        self._last_beat = {s: now for s in self.slices}
+
+    def heartbeat(self, slice_id: str) -> None:
+        self._last_beat[slice_id] = self.clock()
+
+    def healthy_slices(self) -> list[str]:
+        now = self.clock()
+        return [s for s, t in self._last_beat.items()
+                if now - t <= self.timeout_s]
+
+    @property
+    def degraded(self) -> bool:
+        return len(self.healthy_slices()) < len(self.slices)
+
+
+def rescale_restore(ckpt_dir: str, tree_like, make_sharding,
+                    n_devices: int | None = None):
+    """Rebuild a mesh for the current (possibly reduced) device set and
+    restore the latest checkpoint onto it.
+
+    make_sharding(mesh, name, leaf) -> Sharding for each leaf.
+    Returns (step, state, mesh).
+    """
+    from repro.distributed import checkpoint
+
+    new_mesh = build_mesh(n_devices)
+    step, state = checkpoint.restore(
+        ckpt_dir, tree_like,
+        sharding_fn=lambda name, leaf: make_sharding(new_mesh, name, leaf))
+    return step, state, new_mesh

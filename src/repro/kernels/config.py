@@ -1,0 +1,13 @@
+"""Kernel execution configuration.
+
+INTERPRET: this container is CPU-only, so every pallas_call runs the kernel
+body in interpret mode (Python semantics, bit-faithful to the TPU dataflow).
+On a real TPU backend this flips to False and the same kernels compile via
+Mosaic.
+"""
+
+from __future__ import annotations
+
+import jax
+
+INTERPRET: bool = jax.default_backend() != "tpu"

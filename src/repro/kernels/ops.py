@@ -1,0 +1,89 @@
+"""Public jit'd kernel API.
+
+Every entry point takes (spec, state, coeffs, n_steps [, plan params]) and is
+validated against repro.kernels.ref (pure-jnp oracle) by tests/test_kernels.py
+over shape/dtype sweeps.
+
+Scalar stencil coefficients are baked into the kernels as compile-time
+constants (the paper's codes inline them too), so the wrappers hoist them out
+of the traced arguments (static) before jitting; domain-sized coefficient
+streams stay traced arrays.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.core.stencils import StencilSpec
+from repro.kernels import ref as _ref
+from repro.kernels import stencil_fused, stencil_mwd, stencil_sweep
+
+ref = _ref
+
+
+def _split_coeffs(spec: StencilSpec, coeffs):
+    """-> (traced_arrays_or_None, static_scalars_or_None)."""
+    if spec.time_order == 2:
+        c_arr, c_vec = coeffs
+        return c_arr, tuple(float(x) for x in c_vec)
+    if spec.n_coeff_arrays:
+        return coeffs, None
+    return None, tuple(float(x) for x in coeffs)
+
+
+def _join_coeffs(spec: StencilSpec, arrays, scalars):
+    if spec.time_order == 2:
+        return (arrays, scalars)
+    return arrays if spec.n_coeff_arrays else scalars
+
+
+@partial(jax.jit, static_argnames=("spec", "scalars", "n_steps", "bz"))
+def _spatial(spec, state, arrays, scalars, n_steps, bz):
+    coeffs = _join_coeffs(spec, arrays, scalars)
+    return stencil_sweep.run_sweep(spec, state, coeffs, n_steps, bz=bz)
+
+
+def spatial(spec: StencilSpec, state, coeffs, n_steps: int, bz: int = 8):
+    """Optimal spatial blocking baseline: n_steps single-sweep kernel passes."""
+    arrays, scalars = _split_coeffs(spec, coeffs)
+    return _spatial(spec, state, arrays, scalars, n_steps, bz)
+
+
+@partial(jax.jit,
+         static_argnames=("spec", "scalars", "n_steps", "t_block", "bz", "by"))
+def _ghostzone(spec, state, arrays, scalars, n_steps, t_block, bz, by):
+    coeffs = _join_coeffs(spec, arrays, scalars)
+    return stencil_fused.run_fused(spec, state, coeffs, n_steps,
+                                   t_block=t_block, bz=bz, by=by)
+
+
+def ghostzone(spec: StencilSpec, state, coeffs, n_steps: int,
+              t_block: int = 4, bz: int = 16, by: int = 16):
+    """Ghost-zone fused temporal blocking (beyond-paper candidate)."""
+    arrays, scalars = _split_coeffs(spec, coeffs)
+    return _ghostzone(spec, state, arrays, scalars, n_steps, t_block, bz, by)
+
+
+@partial(jax.jit, static_argnames=("spec", "scalars", "n_steps", "d_w", "n_f"))
+def _mwd(spec, state, arrays, scalars, n_steps, d_w, n_f):
+    coeffs = _join_coeffs(spec, arrays, scalars)
+    return stencil_mwd.mwd_run(spec, state, coeffs, n_steps, d_w=d_w, n_f=n_f)
+
+
+def mwd(spec: StencilSpec, state, coeffs, n_steps: int,
+        d_w: int = 8, n_f: int = 2):
+    """Paper-faithful multi-threaded wavefront diamond blocking."""
+    arrays, scalars = _split_coeffs(spec, coeffs)
+    return _mwd(spec, state, arrays, scalars, n_steps, d_w, n_f)
+
+
+@partial(jax.jit, static_argnames=("spec", "n_steps"))
+def naive(spec: StencilSpec, state, coeffs, n_steps: int):
+    """Un-blocked reference (paper Fig. 1a)."""
+    return _ref.naive_steps(spec, state, coeffs, n_steps)
+
+
+METHODS = {"naive": naive, "spatial": spatial, "ghostzone": ghostzone,
+           "mwd": mwd}

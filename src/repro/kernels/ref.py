@@ -1,0 +1,19 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+The oracle for all stencil kernels is the naive sweep sequence from
+repro.core.stencils (interior update, Dirichlet frame) — kernels differ only
+in memory choreography, never in semantics.
+"""
+
+from __future__ import annotations
+
+from repro.core import stencils as st
+
+
+def naive_steps(spec: st.StencilSpec, state, coeffs, n_steps: int):
+    """Advance (cur, prev) by n_steps sequential full-grid sweeps."""
+    return st.run_naive(spec, state, coeffs, n_steps)
+
+
+def single_sweep(spec: st.StencilSpec, state, coeffs):
+    return st.step(spec, state, coeffs)

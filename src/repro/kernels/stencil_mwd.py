@@ -1,0 +1,222 @@
+"""MWD kernel: multi-threaded wavefront diamond blocking, TPU-native.
+
+The paper's core technique (Sec. 4) as one Pallas kernel per diamond row:
+
+  grid = (tile k, wavefront step j)   # sequential on TPU: j streams z
+  * persistent VMEM scratch holds the live z-window of BOTH time-parity
+    buffers (+ coefficient streams) for one extruded diamond tile;
+  * every step j shifts the window down N_F z-rows ("pipelined" wavefront,
+    Fig. 6c — the data marches through the buffer) and DMAs the next slab of
+    every stream HBM->VMEM;
+  * T = D_w/R in-tile time-step updates run at static z-offsets, each masked
+    to the diamond's y-range at that local time (diamonds via masking:
+    rectangular VMEM blocks, non-rectangular iteration space — see DESIGN.md);
+  * one completed slab per parity DMAs back to HBM per step.
+
+Intra-tile parallelization: x is the full-width lane dimension (never tiled,
+paper's leading-dimension rule); y/z vectorize across sublanes. HBM traffic
+per pass is exactly the Eq. 5 code balance: each stream crosses HBM once per
+D_w/(2R) time steps.
+
+Geometry (see derivation in comments): update tau processes padded z-rows
+[N_F*j - (tau+1)R, N_F*(j+1) - (tau+1)R), i.e. buffer rows
+[R*(T-tau), R*(T-tau)+N_F); final-level rows leave through buffer rows
+[R, R+N_F) once j >= D_w/N_F.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import stencils as st
+from repro.core import tiling
+from repro.kernels import config
+
+
+def sync_dirichlet_frame(cur, prev, r: int):
+    """Copy cur's boundary frame into prev (all levels share the frame)."""
+    for ax in range(3):
+        lo = tuple(slice(None) if a != ax else slice(0, r) for a in range(3))
+        hi = tuple(slice(None) if a != ax else slice(-r, None) for a in range(3))
+        prev = prev.at[lo].set(cur[lo]).at[hi].set(cur[hi])
+    return prev
+
+
+def _row_kernel(spec: st.StencilSpec, d_w: int, n_f: int, p0: int,
+                dims, scalars, n_in: int, *refs):
+    """One diamond-row pass. refs = (w0, y0s, y1s, *in_hbm, out_e, out_o,
+    buf_e, buf_o, [coeff_buf], sem, osem)."""
+    w0_ref, y0_ref, y1_ref = refs[:3]
+    inputs = refs[3:3 + n_in]
+    out_e, out_o = refs[3 + n_in:5 + n_in]
+    sem, osem = refs[-2], refs[-1]
+    bufs = list(refs[5 + n_in:-2])
+
+    r = spec.radius
+    t_steps = d_w // r                  # T = 2H updates per tile
+    z_ws = n_f + r * t_steps + r        # live window thickness
+    nz, ny, nx, pz, py, px = dims
+    k, j = pl.program_id(0), pl.program_id(1)
+    w0 = w0_ref[k]
+
+    @pl.when(j == 0)
+    def _init():
+        for b in bufs:
+            b[...] = jnp.zeros_like(b)
+
+    # --- shift the wavefront window down by N_F, stream next slabs in ------
+    for b in bufs:
+        if len(b.shape) == 3:
+            b[0:z_ws - n_f] = b[n_f:z_ws]
+        else:
+            b[:, 0:z_ws - n_f] = b[:, n_f:z_ws]
+    wy = bufs[0].shape[-2]
+    for src, dst in zip(inputs, bufs):
+        if len(src.shape) == 3:
+            idx = (pl.ds(j * n_f, n_f), pl.ds(w0, wy))
+            didx = (pl.ds(z_ws - n_f, n_f),)
+        else:
+            idx = (slice(None), pl.ds(j * n_f, n_f), pl.ds(w0, wy))
+            didx = (slice(None), pl.ds(z_ws - n_f, n_f))
+        cp = pltpu.make_async_copy(src.at[idx], dst.at[didx], sem)
+        cp.start()
+        cp.wait()
+
+    coeff_buf = bufs[2] if len(bufs) > 2 else None
+    nxp = bufs[0].shape[-1]
+    shape = (n_f, wy, nxp)
+    y_io = jax.lax.broadcasted_iota(jnp.int32, shape, 1) + w0
+    x_io = jax.lax.broadcasted_iota(jnp.int32, shape, 2)
+    z_loc = jax.lax.broadcasted_iota(jnp.int32, shape, 0)
+    x_mask = (x_io >= px + r) & (x_io < px + nx - r)
+
+    # --- T in-tile updates at static buffer offsets ------------------------
+    for tau in range(t_steps):
+        zb = r * (t_steps - tau)        # buffer row of the N_F target rows
+        p = (p0 + tau) % 2
+        src_b, dst_b = bufs[p], bufs[1 - p]
+        ws = src_b[zb - r:zb + n_f + r]
+        pws = dst_b[zb - r:zb + n_f + r]
+        if spec.time_order == 2:
+            cf = (coeff_buf[zb - r:zb + n_f + r], scalars)
+        elif spec.n_coeff_arrays:
+            cf = coeff_buf[:, zb - r:zb + n_f + r]
+        else:
+            cf = scalars
+        new = st.sweep_fn(spec)(ws, pws, cf)[r:r + n_f]
+
+        y0 = y0_ref[k, tau]
+        y1 = y1_ref[k, tau]
+        z_io = z_loc + (j * n_f - (tau + 1) * r)     # padded z coordinate
+        mask = ((y_io >= y0) & (y_io < y1)
+                & (z_io >= pz + r) & (z_io < pz + nz - r) & x_mask)
+        dst_b[zb:zb + n_f] = jnp.where(mask, new, dst_b[zb:zb + n_f])
+
+    # --- emit the completed slab (both parities) ---------------------------
+    @pl.when(j >= d_w // n_f)
+    def _out():
+        zs = j * n_f - d_w
+        for out, b in ((out_e, bufs[0]), (out_o, bufs[1])):
+            cp = pltpu.make_async_copy(
+                b.at[pl.ds(r, n_f), pl.ds(r, d_w)],
+                out.at[pl.ds(zs, n_f), pl.ds(w0 + r, d_w)], osem)
+            cp.start()
+            cp.wait()
+
+
+def _row_prefetch(sched: tiling.DiamondSchedule, row_idx: int, d_w: int,
+                  r: int, ny: int, py: int):
+    """Per-tile window offsets and per-tau diamond y-ranges (padded coords)."""
+    h = d_w // (2 * r)
+    t_base = (row_idx - 1) * h
+    cols = list(range(-1, ny // d_w + 2))
+    by_col = {t.col: t for t in sched.rows_by_index().get(row_idx, ())}
+    t_steps = 2 * h
+    w0 = np.zeros(len(cols), np.int32)
+    y0s = np.zeros((len(cols), t_steps), np.int32)
+    y1s = np.zeros((len(cols), t_steps), np.int32)
+    for i, col in enumerate(cols):
+        center = col * d_w + r + (d_w // 2 if row_idx % 2 else 0)
+        w0[i] = center - d_w // 2 - r + py
+        tile = by_col.get(col)
+        if tile is not None:
+            for (t, a, b) in tile.spans:
+                tau = t - t_base
+                if 0 <= tau < t_steps:
+                    y0s[i, tau] = a + py
+                    y1s[i, tau] = b + py
+    return t_base, w0, y0s, y1s
+
+
+def mwd_run(spec: st.StencilSpec, state, coeffs, n_steps: int, *,
+            d_w: int = 8, n_f: int = 2):
+    """Advance n_steps with row-wise MWD kernel passes: state -> state."""
+    r = spec.radius
+    if d_w % (2 * r) or d_w % n_f:
+        raise ValueError(f"need 2R | d_w and n_f | d_w (d_w={d_w}, R={r}, "
+                         f"n_f={n_f})")
+    cur, prev = state
+    prev = sync_dirichlet_frame(cur, prev, r)
+    nz, ny, nx = cur.shape
+    t_steps = d_w // r
+    z_ws = n_f + r * t_steps + r
+    pz, px = r, r
+    py = 2 * d_w + r
+    n_j = -(-(pz + nz + d_w) // n_f)
+    nz_tot = n_j * n_f
+    nyp, nxp = ny + 2 * py, nx + 2 * px
+    pads = ((pz, nz_tot - nz - pz), (py, py), (px, px))
+
+    def pad(a):
+        return jnp.pad(a, pads, mode="edge")
+
+    bufs = [pad(cur), pad(prev)]         # parity 0 (even), parity 1 (odd)
+    win = (z_ws, d_w + 2 * r, nxp)
+    scratch = [pltpu.VMEM(win, cur.dtype), pltpu.VMEM(win, cur.dtype)]
+    scalars = ()
+    coeff_in = []
+    if spec.time_order == 2:
+        c_arr, c_vec = coeffs
+        coeff_in = [pad(c_arr)]
+        scratch.append(pltpu.VMEM(win, cur.dtype))
+        scalars = tuple(float(x) for x in c_vec)
+    elif spec.n_coeff_arrays:
+        coeff_in = [jnp.pad(coeffs, ((0, 0),) + pads, mode="edge")]
+        scratch.append(pltpu.VMEM((spec.n_coeff_arrays,) + win, cur.dtype))
+    else:
+        scalars = tuple(float(x) for x in coeffs)
+    scratch += [pltpu.SemaphoreType.DMA, pltpu.SemaphoreType.DMA]
+
+    sched = tiling.make_diamond_schedule(d_w, r, n_steps, r, ny - r)
+    out_sds = jax.ShapeDtypeStruct((nz_tot, nyp, nxp), cur.dtype)
+    dims = (nz, ny, nx, pz, py, px)
+
+    row_indices = sorted(sched.rows_by_index())
+    for row_idx in row_indices:
+        t_base, w0, y0s, y1s = _row_prefetch(sched, row_idx, d_w, r, ny, py)
+        p0 = t_base % 2
+        kern = functools.partial(_row_kernel, spec, d_w, n_f, p0, dims,
+                                 scalars, 2 + len(coeff_in))
+        bufs = list(pl.pallas_call(
+            kern,
+            grid_spec=pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=3,
+                grid=(len(w0), n_j),
+                in_specs=[pl.BlockSpec(memory_space=pl.ANY)] * (2 + len(coeff_in)),
+                out_specs=(pl.BlockSpec(memory_space=pl.ANY),) * 2,
+                scratch_shapes=scratch,
+            ),
+            out_shape=(out_sds, out_sds),
+            interpret=config.INTERPRET,
+        )(jnp.asarray(w0), jnp.asarray(y0s), jnp.asarray(y1s),
+          bufs[0], bufs[1], *coeff_in))
+
+    core = (slice(pz, pz + nz), slice(py, py + ny), slice(px, px + nx))
+    p = n_steps % 2
+    return bufs[p][core], bufs[1 - p][core]

@@ -1,0 +1,106 @@
+"""Spatially-blocked single-sweep stencil kernel (the paper's baseline).
+
+One time step over the grid, z-slab blocked: each grid step manually DMAs an
+overlapping (Bz + 2R) z-window of the (y,x)-padded arrays HBM->VMEM, applies
+the stencil on the VMEM window (reusing the exact jnp sweep from
+repro.core.stencils as the in-VMEM compute), and emits a Bz-thick output slab.
+x is full-width lanes (never tiled — paper Sec. 4.1); y is kept whole here
+(the slab thickness Bz bounds the VMEM footprint).
+
+This realizes "optimal spatial blocking": code balance = word*(N_D+1) B/LUP.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import stencils as st
+from repro.kernels import config
+
+
+def _kernel(spec: st.StencilSpec, bz: int, n_in: int, scalars, *refs):
+    """refs = (*inputs_hbm, out_ref, *windows_vmem, sem)."""
+    inputs = refs[:n_in]
+    out_ref = refs[n_in]
+    wins = refs[n_in + 1:-1]
+    sem = refs[-1]
+    r = spec.radius
+    i = pl.program_id(0)
+
+    # DMA the overlapping window of every stream (z window rows
+    # [i*bz, i*bz + bz + 2R) in padded coords).
+    for src, dst in zip(inputs, wins):
+        if len(src.shape) == 3:
+            cp = pltpu.make_async_copy(src.at[pl.ds(i * bz, bz + 2 * r)], dst, sem)
+        else:  # stacked coefficient streams (k, z, y, x)
+            cp = pltpu.make_async_copy(
+                src.at[:, pl.ds(i * bz, bz + 2 * r)], dst, sem)
+        cp.start()
+        cp.wait()
+
+    w_cur = wins[0][...]
+    if spec.time_order == 2:
+        new = st.sweep_fn(spec)(w_cur, wins[1][...], (wins[2][...], scalars))
+    elif spec.n_coeff_arrays:
+        new = st.sweep_fn(spec)(w_cur, None, wins[1][...])
+    else:
+        new = st.sweep_fn(spec)(w_cur, None, scalars)
+    out_ref[...] = new[r:r + bz]
+
+
+def sweep_step(spec: st.StencilSpec, state, coeffs, *, bz: int = 8):
+    """One interior-update time step via the Pallas kernel: state -> state."""
+    cur, prev = state
+    r = spec.radius
+    nz, ny, nx = cur.shape
+    nzp = -(-nz // bz) * bz  # round z up to slab multiple
+    pads = ((r, r + nzp - nz), (r, r), (r, r))
+
+    def pad(a):
+        return jnp.pad(a, pads, mode="edge")
+
+    cur_p = pad(cur)
+    nyp, nxp = ny + 2 * r, nx + 2 * r
+    inputs = [cur_p]
+    win_shapes = [(bz + 2 * r, nyp, nxp)]
+    scalars = ()
+    if spec.time_order == 2:
+        inputs.append(pad(prev))
+        win_shapes.append((bz + 2 * r, nyp, nxp))
+        c_arr, c_vec = coeffs
+        inputs.append(pad(c_arr))
+        win_shapes.append((bz + 2 * r, nyp, nxp))
+        scalars = tuple(float(x) for x in c_vec)
+    elif spec.n_coeff_arrays:
+        k = spec.n_coeff_arrays
+        inputs.append(jnp.pad(coeffs, ((0, 0),) + pads, mode="edge"))
+        win_shapes.append((k, bz + 2 * r, nyp, nxp))
+    else:
+        scalars = tuple(float(x) for x in coeffs)
+
+    kern = functools.partial(_kernel, spec, bz, len(inputs), scalars)
+    out = pl.pallas_call(
+        kern,
+        grid=(nzp // bz,),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)] * len(inputs),
+        out_specs=pl.BlockSpec((bz, nyp, nxp), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nzp, nyp, nxp), cur.dtype),
+        scratch_shapes=[pltpu.VMEM(s, cur.dtype) for s in win_shapes]
+        + [pltpu.SemaphoreType.DMA],
+        interpret=config.INTERPRET,
+    )(*inputs)
+    # splice the computed interior back into the Dirichlet frame:
+    # out index == original z index; y/x are padded-coordinate (+r) offsets
+    new = cur.at[r:-r, r:-r, r:-r].set(out[r:nz - r, 2 * r:ny, 2 * r:nx])
+    return (new, cur)
+
+
+def run_sweep(spec: st.StencilSpec, state, coeffs, n_steps: int, *, bz: int = 8):
+    for _ in range(n_steps):
+        state = sweep_step(spec, state, coeffs, bz=bz)
+    return state

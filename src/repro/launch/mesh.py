@@ -1,0 +1,29 @@
+"""Production mesh construction (importing this module never touches JAX
+device state — meshes are built inside functions only)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """16x16 = 256 chips per pod ('data','model'); two pods add a 'pod' axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_debug_mesh(shape=(2, 2), axes=("data", "model")) -> jax.sharding.Mesh:
+    """Small mesh over however many (possibly forced-host) devices exist."""
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def batch_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
+    """Mesh axes the global batch is sharded over (DP/FSDP axes)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def model_axis(mesh: jax.sharding.Mesh) -> str:
+    return "model"

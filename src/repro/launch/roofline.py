@@ -1,0 +1,240 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+compute    = FLOPs_dev / peak_bf16
+memory     = bytes_dev / hbm_bw
+collective = collective_bytes_dev / ici_link_bw
+
+cost_analysis() is per-device post-SPMD (verified empirically). Collective
+bytes are parsed from the optimized HLO: for each {all-reduce, all-gather,
+reduce-scatter, all-to-all, collective-permute} op we take the result shape
+and convert to OPERAND bytes (all-gather: result/G; reduce-scatter:
+result*G; others: result), G = replica group size — i.e. the brief's
+"sum of operand sizes".
+
+Caveat handled here: XLA cost analysis counts while-loop bodies once. The
+models lower with layers python-unrolled, attention q-chunked by a static
+python loop, and only O(L/Q * HNP)-flop state carries inside lax.scan
+(mamba), so HLO counts are exact up to those negligible carries.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+from repro import hw
+from repro.core.models import RooflineTerms, roofline
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g. "bf16[8,128]{1,0}" or "f32[]"
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:  # iota form [ngroups,group_size]
+        return int(m.group(2))
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Per-device operand bytes by collective type (fused ops included)."""
+    out = {k: 0.0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+"
+                     r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+                     r"collective-permute)(?:-start|-done)?\(", stripped)
+        if not m:
+            continue
+        if "-done(" in stripped:   # avoid double counting start/done pairs
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        nbytes = _shape_bytes(shape_str)
+        g = _group_size(stripped)
+        if op == "all-gather":
+            nbytes = nbytes // max(g, 1)
+        elif op == "reduce-scatter":
+            nbytes = nbytes * g
+        out[op] += float(nbytes)
+    return out
+
+
+def analytic_hbm_bytes(cfg, shape_info: dict, n_params: int, n_active: int,
+                       n_devices: int, *, accum: int = 1, tp: int = 16) -> float:
+    """Per-device HBM traffic model (drives the memory roofline term).
+
+    XLA:CPU's `bytes accessed` sums every HLO op's operand+result bytes with
+    CPU-grade fusion, overcounting true HBM traffic >10x vs a TPU
+    compilation (measured: llama3.2-1b train_4k reports 2.26 TB/device/step).
+    The memory term therefore uses this explicit traffic model; the HLO
+    number is reported alongside as a diagnostic.
+
+    train:  params bf16 read (fwd+bwd+remat = 3 x 2N) + f32 grad write+read
+            per accumulation round (accum x 2 x 4N) + AdamW m,v read/write
+            (4 x 4N, upper bound for Adafactor) + activations ~24 x d_model
+            bf16 streams per token-layer, TP-sharded.
+    prefill: params read once + 8 streams/token-layer + KV write.
+    decode:  active params read once + KV/state cache read + append.
+    """
+    kind = shape_info["kind"]
+    toks = shape_info["global_batch"] * shape_info["seq_len"]
+    d, L, hd = cfg.d_model, cfg.n_layers, cfg.resolved_head_dim
+    kv_bytes_tok = 2 * cfg.n_kv_heads * hd * 2  # k+v bf16 per attn layer
+    n_attn = sum(cfg.layer_kind(i) != "mamba" for i in range(L))
+    if kind == "train":
+        params = (3 * 2 + accum * 2 * 4 + 4 * 4) * float(n_params)
+        act = 24.0 * 2 * d * L * toks / tp
+        return (params + act) / n_devices
+    if kind == "prefill":
+        params = 2.0 * n_params
+        act = 8.0 * 2 * d * L * toks / tp
+        kv_write = float(toks) * kv_bytes_tok * n_attn
+        return (params + act + kv_write) / n_devices
+    b = shape_info["global_batch"]
+    cache_read = 0.0
+    for i in range(L):
+        k = cfg.layer_kind(i)
+        if k == "global":
+            cache_read += b * shape_info["seq_len"] * kv_bytes_tok
+        elif k == "local":
+            cache_read += b * min(cfg.window,
+                                  shape_info["seq_len"]) * kv_bytes_tok
+        else:  # mamba state r/w
+            cache_read += 2 * b * cfg.ssm_heads * cfg.ssm_state \
+                * cfg.ssm_head_dim * 4
+    return (2.0 * n_active + cache_read) / n_devices
+
+
+@dataclasses.dataclass
+class DryrunResult:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    flops_per_device: float
+    bytes_per_device: float          # HLO 'bytes accessed' (diagnostic)
+    model_bytes_per_device: float    # analytic HBM model (memory term)
+    coll_bytes: dict[str, float]
+    peak_bytes_per_device: float
+    arg_bytes_per_device: float
+    model_flops_global: float
+    terms: RooflineTerms             # memory term from the analytic model
+    terms_hlo: RooflineTerms         # memory term from HLO bytes (diagnostic)
+    lower_s: float
+    compile_s: float
+    notes: str = ""
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (remat/dispatch/redundancy waste)."""
+        hlo_global = self.flops_per_device * self.n_devices
+        return self.model_flops_global / hlo_global if hlo_global else 0.0
+
+    def to_json(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "n_devices": self.n_devices,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "model_bytes_per_device": self.model_bytes_per_device,
+            "coll_bytes": self.coll_bytes,
+            "peak_bytes_per_device": self.peak_bytes_per_device,
+            "arg_bytes_per_device": self.arg_bytes_per_device,
+            "model_flops_global": self.model_flops_global,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "t_compute": self.terms.t_compute,
+            "t_memory": self.terms.t_memory,
+            "t_memory_hlo": self.terms_hlo.t_memory,
+            "t_collective": self.terms.t_collective,
+            "dominant": self.terms.dominant,
+            "roofline_fraction": self.terms.roofline_fraction,
+            "lower_s": self.lower_s, "compile_s": self.compile_s,
+            "notes": self.notes,
+        }
+
+
+def analyze(compiled, *, arch: str, shape: str, mesh_name: str,
+            n_devices: int, model_flops: float, model_bytes: float,
+            lower_s: float, compile_s: float, notes: str = "",
+            chip: hw.ChipSpec = hw.V5E) -> DryrunResult:
+    ca = compiled.cost_analysis()
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    coll = collective_bytes(compiled.as_text())
+    coll_total = sum(coll.values())
+    mem = compiled.memory_analysis()
+    peak = float(mem.temp_size_in_bytes + mem.argument_size_in_bytes)
+    return DryrunResult(
+        arch=arch, shape=shape, mesh=mesh_name, n_devices=n_devices,
+        flops_per_device=flops, bytes_per_device=byts,
+        model_bytes_per_device=model_bytes, coll_bytes=coll,
+        peak_bytes_per_device=peak,
+        arg_bytes_per_device=float(mem.argument_size_in_bytes),
+        model_flops_global=model_flops,
+        terms=roofline(flops, model_bytes, coll_total, chip),
+        terms_hlo=roofline(flops, byts, coll_total, chip),
+        lower_s=lower_s, compile_s=compile_s, notes=notes)
+
+
+def model_flops(cfg, shape_info: dict, n_params: int,
+                n_active_params: int) -> float:
+    """6*N*D (train) / 2*N*D (prefill) / 2*N*B (decode), N = active params."""
+    kind = shape_info["kind"]
+    if kind == "train":
+        tokens = shape_info["global_batch"] * shape_info["seq_len"]
+        return 6.0 * n_active_params * tokens
+    if kind == "prefill":
+        tokens = shape_info["global_batch"] * shape_info["seq_len"]
+        return 2.0 * n_active_params * tokens
+    return 2.0 * n_active_params * shape_info["global_batch"]
+
+
+def active_params(cfg, spec_tree) -> tuple[int, int]:
+    """(total, active) parameter counts (MoE: top-k fraction of experts)."""
+    import jax
+
+    from repro.models.params import is_spec
+    total = active = 0
+    for path, s in jax.tree_util.tree_leaves_with_path(spec_tree,
+                                                       is_leaf=is_spec):
+        n = int(np.prod(s.shape))
+        total += n
+        name = jax.tree_util.keystr(path)
+        is_expert = (cfg.n_experts and "'ffn'" in name
+                     and ("wi_gate" in name or "wi_up" in name
+                          or "'wo'" in name)
+                     and cfg.n_experts in s.shape[:2])  # unrolled or stacked
+        if is_expert:
+            active += n * cfg.experts_per_token // cfg.n_experts
+        else:
+            active += n
+    return total, active

@@ -1,0 +1,84 @@
+"""Serving launcher: batched prefill + decode loop with a KV/state cache.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m --reduced \
+      --batch 4 --prompt-len 32 --gen 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.distributed import elastic
+from repro.models import lm
+from repro.models.params import tree_init
+from repro.training import sharding as shd
+from repro.training import steps as tsteps
+
+
+def prefill_into_cache(cfg, params, tokens):
+    """Prefill by stepping the decode path (simple, exact; a fused chunked
+    prefill-into-cache is the serving-optimized variant)."""
+    b, s = tokens.shape
+    cache = lm.init_cache(cfg, b, s + 64)
+    serve = tsteps.make_serve_step(cfg)
+    logits = None
+    for i in range(s):
+        _, logits, cache = serve(params, cache, tokens[:, i:i + 1])
+    return logits, cache
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b",
+                    choices=list(configs.ARCH_IDS))
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args(argv)
+
+    cfg = configs.get(args.arch)
+    if args.reduced:
+        cfg = configs.reduced(cfg)
+    if not cfg.supports_decode:
+        raise SystemExit(f"{cfg.name} is encoder-only: no decode")
+    mesh = elastic.build_mesh()
+    params = jax.device_put(tree_init(lm.param_specs(cfg), seed=0),
+                            shd.param_shardings(mesh, lm.param_specs(cfg)))
+
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
+        jnp.int32)
+
+    with jax.set_mesh(mesh):
+        t0 = time.perf_counter()
+        _, cache = prefill_into_cache(cfg, params, prompts)
+        t_prefill = time.perf_counter() - t0
+
+        serve = jax.jit(tsteps.make_serve_step(cfg))
+        toks = prompts[:, -1:]
+        out = []
+        t0 = time.perf_counter()
+        for _ in range(args.gen):
+            toks, _, cache = serve(params, cache, toks)
+            out.append(toks)
+        jax.block_until_ready(toks)
+        t_gen = time.perf_counter() - t0
+
+    gen = jnp.concatenate(out, axis=1)
+    tput = args.batch * args.gen / t_gen
+    print(f"prefill {args.batch}x{args.prompt_len} in {t_prefill*1e3:.0f}ms; "
+          f"generated {args.gen} tokens/seq at {tput:.1f} tok/s "
+          f"(batch={args.batch})")
+    print("sample token ids:", np.asarray(gen[0])[:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,213 @@
+"""Transformer building blocks: RMSNorm, RoPE/M-RoPE, GQA attention
+(full/sliding-window/encoder, qk-norm), gated & plain MLPs.
+
+Attention is q-chunked with a static python loop: exact HLO flop accounting
+(no while-loops that XLA cost analysis would undercount) and bounded logits
+memory; sliding-window layers statically restrict each q-chunk's KV range —
+the SWA-as-sequence-stencil correspondence from DESIGN.md. Each block is
+wrapped in jax.checkpoint by the caller (remat).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common as C
+from repro.models.params import ParamSpec
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Norms & MLPs
+# ---------------------------------------------------------------------------
+
+def rmsnorm_spec(d: int) -> ParamSpec:
+    return ParamSpec((d,), ("embed",), dtype="float32")
+
+
+def rmsnorm(x, w, eps: float = 1e-6):
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w).astype(x.dtype)
+
+
+def mlp_specs(cfg: ArchConfig, dtype: str) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.act == "gelu2":    # plain 2-matrix FFN (hubert)
+        return {"wi": ParamSpec((d, f), ("embed", "mlp"), dtype),
+                "wo": ParamSpec((f, d), ("mlp", "embed"), dtype)}
+    return {"wi_gate": ParamSpec((d, f), ("embed", "mlp"), dtype),
+            "wi_up": ParamSpec((d, f), ("embed", "mlp"), dtype),
+            "wo": ParamSpec((f, d), ("mlp", "embed"), dtype)}
+
+
+def mlp(p, x, act: str):
+    if act == "gelu2":
+        h = C.constrain(jax.nn.gelu(x @ p["wi"]), C.BATCH, None, C.MODEL)
+        return h @ p["wo"]
+    nonlin = jax.nn.gelu if act == "gelu" else jax.nn.silu
+    h = nonlin(x @ p["wi_gate"]) * (x @ p["wi_up"])
+    h = C.constrain(h, C.BATCH, None, C.MODEL)
+    return h @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+def rope_angles(positions, head_dim: int, theta: float,
+                sections: tuple[int, ...] = ()):
+    """positions: (B,S) or (3,B,S) for M-RoPE. Returns cos,sin (B,S,half)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(half, dtype=F32) / half)
+    if sections:
+        assert sum(sections) == half, (sections, half)
+        # frequency i takes its position stream from its (t,h,w) section
+        sec_id = jnp.repeat(jnp.arange(len(sections)),
+                            jnp.asarray(sections), total_repeat_length=half)
+        pos = positions.astype(F32)[sec_id]              # (half,B,S)
+        ang = jnp.moveaxis(pos, 0, -1) * freqs           # (B,S,half)
+    else:
+        ang = positions.astype(F32)[..., None] * freqs   # (B,S,half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B,S,H,D); cos/sin: (B,S,half)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c, s = cos[:, :, None, :], sin[:, :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c],
+                           axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+def attention_specs(cfg: ArchConfig, dtype: str) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, hkv = cfg.n_heads, cfg.n_kv_heads
+    p = {
+        "wq": ParamSpec((d, h, hd), ("embed", "heads", None), dtype),
+        "wk": ParamSpec((d, hkv, hd), ("embed", "kv_heads", None), dtype),
+        "wv": ParamSpec((d, hkv, hd), ("embed", "kv_heads", None), dtype),
+        "wo": ParamSpec((h, hd, d), ("heads", None, "embed"), dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = ParamSpec((hd,), (None,), "float32")
+        p["k_norm"] = ParamSpec((hd,), (None,), "float32")
+    return p
+
+
+def _qk_rmsnorm(x, w, eps):
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w).astype(x.dtype)
+
+
+def attention_core(q, k, v, *, kind: str, window: int, causal: bool,
+                   q_offset: int = 0, chunk: int = 2048):
+    """q (B,Sq,H,D) x k,v (B,Sk,Hkv,D) -> (B,Sq,H,D).
+
+    Static q-chunking; "local" layers slice each chunk's KV range statically
+    to [qpos - window + 1, qpos]. q_offset = absolute position of q[0]
+    (decode: cache length; prefill: 0).
+    """
+    b, sq, h, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    rep = h // hkv
+    scale = d ** -0.5
+    qr = q.reshape(b, sq, hkv, rep, d)
+    chunk = min(chunk, sq)
+    outs = []
+    for s0 in range(0, sq, chunk):
+        s1 = min(s0 + chunk, sq)
+        qc = qr[:, s0:s1]
+        if kind == "local" and causal:
+            k0 = max(0, q_offset + s0 - window + 1)
+        else:
+            k0 = 0
+        k1 = min(sk, q_offset + s1) if causal else sk
+        kc, vc = k[:, k0:k1], v[:, k0:k1]
+        logits = jnp.einsum("bqgrd,bkgd->bgrqk", qc, kc,
+                            preferred_element_type=F32) * scale
+        qpos = q_offset + s0 + jnp.arange(s1 - s0)[:, None]
+        kpos = k0 + jnp.arange(k1 - k0)[None, :]
+        if causal:
+            m = qpos >= kpos
+            if kind == "local":
+                m &= (qpos - kpos) < window
+            logits = jnp.where(m, logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+        outs.append(jnp.einsum("bgrqk,bkgd->bqgrd", w, vc))
+    out = jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+    return out.reshape(b, sq, h, d)
+
+
+def attention(p, cfg: ArchConfig, x, positions, kind: str, *,
+              cache=None, chunk: int = 2048, sections=()):
+    """Full attention block. cache: None (train/prefill) or dict with
+    {"k","v","length"} for single-token decode (returns updated cache)."""
+    b, s, _ = x.shape
+    q = C.constrain(jnp.einsum("bsd,dhk->bshk", x, p["wq"]),
+                    C.BATCH, None, C.MODEL, None)
+    k = C.constrain(jnp.einsum("bsd,dhk->bshk", x, p["wk"]),
+                    C.BATCH, None, C.MODEL, None)
+    v = C.constrain(jnp.einsum("bsd,dhk->bshk", x, p["wv"]),
+                    C.BATCH, None, C.MODEL, None)
+    if cfg.qk_norm:
+        q = _qk_rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = _qk_rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    cos, sin = rope_angles(positions, cfg.resolved_head_dim, cfg.rope_theta,
+                           sections)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    if cache is None:
+        if cfg.seq_parallel_attn:
+            # context parallelism: when n_heads doesn't divide the model
+            # axis (gemma3: 4, qwen2-vl: 12 on 16-way TP) head replication
+            # wastes the whole axis; shard the QUERY sequence instead (KV is
+            # small for MQA/GQA and replicates via all-gather). No q-chunk
+            # loop: the seq shards already bound the logits footprint.
+            q = C.constrain(q, C.BATCH, C.MODEL, None, None)
+            out = attention_core(q, k, v, kind=kind, window=cfg.window,
+                                 causal=cfg.causal, chunk=q.shape[1])
+            out = C.constrain(out, C.BATCH, C.MODEL, None, None)
+        else:
+            out = attention_core(q, k, v, kind=kind, window=cfg.window,
+                                 causal=cfg.causal, chunk=chunk)
+        new_cache = None
+    else:
+        # decode: append (ring-buffered for local layers) and attend
+        ck, cv, ln = cache["k"], cache["v"], cache["length"]
+        cap = ck.shape[1]
+        idx = ln % cap if kind == "local" else ln
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k, idx, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v, idx, axis=1)
+        kpos_abs = jnp.arange(cap)
+        if kind == "local":
+            # ring buffer slot i holds the largest position p <= ln with
+            # p % cap == i; negative p = slot not yet filled
+            kpos = ln - jnp.mod(ln - kpos_abs, cap)
+            valid = (kpos >= 0) & (ln - kpos < cfg.window)
+        else:
+            kpos = kpos_abs
+            valid = kpos <= ln
+        rep = cfg.n_heads // cfg.n_kv_heads
+        qr = q.reshape(b, 1, cfg.n_kv_heads, rep, -1)
+        logits = jnp.einsum("bqgrd,bkgd->bgrqk", qr, ck,
+                            preferred_element_type=F32)
+        logits = logits * (cfg.resolved_head_dim ** -0.5)
+        logits = jnp.where(valid[None, None, None, None, :], logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bgrqk,bkgd->bqgrd", w, cv)
+        out = out.reshape(b, 1, cfg.n_heads, -1)
+        new_cache = {"k": ck, "v": cv, "length": ln + 1}
+
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, new_cache

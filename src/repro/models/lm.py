@@ -1,0 +1,301 @@
+"""Model assembly: embed -> [attention|mamba (+ MLP|MoE)] x L -> norm -> head.
+
+One composable definition covers all 10 assigned architectures via
+ArchConfig.layer_pattern / is_moe_layer: dense decoders, encoder-only
+(hubert), SSM (mamba2), MoE (mixtral/kimi), hybrid MoE (jamba), and the
+stubbed-frontend modalities (hubert audio frames, qwen2-vl patches + M-RoPE).
+
+Layers are python-unrolled (exact HLO cost accounting — see DESIGN.md Sec. 7)
+and remat-wrapped per block.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import moe as MOE
+from repro.models.params import ParamSpec
+
+F32 = jnp.float32
+
+
+from repro.models.common import BATCH as BATCH_AXES, constrain as _constrain
+
+
+# ---------------------------------------------------------------------------
+# Parameter tree
+# ---------------------------------------------------------------------------
+
+def _block_specs(cfg: ArchConfig, i: int) -> dict:
+    dt, d = cfg.dtype, cfg.d_model
+    kind = cfg.layer_kind(i)
+    blk: dict = {"norm1": L.rmsnorm_spec(d)}
+    if kind == "mamba":
+        blk["mixer"] = M.mamba_specs(cfg, dt)
+    else:
+        blk["mixer"] = L.attention_specs(cfg, dt)
+    if cfg.d_ff:
+        blk["norm2"] = L.rmsnorm_spec(d)
+        if cfg.is_moe_layer(i):
+            blk["ffn"] = MOE.moe_specs(cfg, dt)
+        else:
+            blk["ffn"] = L.mlp_specs(cfg, dt)
+    return blk
+
+
+def _stack_spec(spec: ParamSpec, n: int) -> ParamSpec:
+    return ParamSpec((n,) + spec.shape, (None,) + spec.axes, spec.dtype,
+                     spec.init_scale)
+
+
+def param_specs(cfg: ArchConfig, *, stacked: bool = False) -> dict:
+    """stacked=True groups layers into pattern-period stacks consumed by a
+    lax.scan (fast full-size compiles for the dry-run); stacked=False
+    python-unrolls every layer (exact HLO cost accounting)."""
+    dt = cfg.dtype
+    d = cfg.d_model
+    tree: dict = {
+        "embed": ParamSpec((cfg.vocab_size, d), ("vocab", "embed"), dt),
+        "final_norm": L.rmsnorm_spec(d),
+    }
+    if not cfg.tie_embeddings:
+        tree["head"] = ParamSpec((d, cfg.vocab_size), ("embed", "vocab"), dt)
+    if not stacked:
+        tree["blocks"] = [_block_specs(cfg, i) for i in range(cfg.n_layers)]
+        return tree
+    period = cfg.pattern_period
+    n_rep = cfg.n_layers // period
+    rem = cfg.n_layers - n_rep * period
+    tree["blocks_stacked"] = [
+        jax.tree_util.tree_map(lambda s: _stack_spec(s, n_rep),
+                               _block_specs(cfg, j),
+                               is_leaf=lambda x: isinstance(x, ParamSpec))
+        for j in range(period)]
+    tree["blocks_tail"] = [_block_specs(cfg, n_rep * period + j)
+                           for j in range(rem)]
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _block_apply(cfg: ArchConfig, i: int, p: dict, x, positions, *,
+                 cache=None, chunk: int = 2048):
+    kind = cfg.layer_kind(i)
+    h = L.rmsnorm(x, p["norm1"], cfg.norm_eps)
+    if kind == "mamba":
+        mixed, new_cache = M.mamba_block(p["mixer"], cfg, h, cache=cache)
+    else:
+        mixed, new_cache = L.attention(
+            p["mixer"], cfg, h, positions, kind, cache=cache, chunk=chunk,
+            sections=cfg.mrope_sections)
+    x = x + mixed
+    aux = jnp.zeros((), F32)
+    if cfg.d_ff:
+        h2 = L.rmsnorm(x, p["norm2"], cfg.norm_eps)
+        if cfg.is_moe_layer(i):
+            y, aux = MOE.moe_ffn(p["ffn"], cfg, h2, cfg.act)
+        else:
+            y = L.mlp(p["ffn"], h2, cfg.act)
+        x = x + y
+    return x, new_cache, aux
+
+
+def _embed_and_positions(cfg, params, batch):
+    if "embeds" in batch:
+        x = batch["embeds"].astype(jnp.dtype(cfg.dtype))
+    else:
+        # constrain right at the gather: without this the partitioner keeps
+        # the lookup output sharded like the table (model x data on d) and
+        # later resorts to "involuntary full rematerialization" resharding
+        x = _constrain(params["embed"][batch["tokens"]],
+                       BATCH_AXES, None, None)
+    b, s = x.shape[:2]
+    if "positions" in batch:
+        positions = batch["positions"]
+    else:
+        pos = jnp.arange(s, dtype=jnp.int32)[None, :]
+        positions = jnp.broadcast_to(pos, (b, s))
+        if cfg.mrope_sections:
+            positions = jnp.broadcast_to(positions[None], (3, b, s))
+    return x, positions
+
+
+def _head(cfg, params, x):
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return _constrain(x @ head, BATCH_AXES, None, "model")
+
+
+def forward(cfg: ArchConfig, params: dict, batch: dict, *,
+            chunk: int = 2048):
+    """Train/prefill forward. batch: {"tokens"|"embeds", ["positions"]}.
+    Returns (logits, aux_loss). Detects stacked vs unrolled param layout."""
+    x, positions = _embed_and_positions(cfg, params, batch)
+    aux_total = jnp.zeros((), F32)
+
+    if "blocks" in params:
+        for i, blk in enumerate(params["blocks"]):
+            def run(x, blk=blk, i=i):
+                y, _, aux = _block_apply(cfg, i, blk, x, positions,
+                                         chunk=chunk)
+                return y, aux
+            if cfg.remat:
+                run = jax.checkpoint(run)
+            x, aux = run(x)
+            x = _constrain(x, BATCH_AXES, None, None)
+            aux_total = aux_total + aux
+    else:
+        period = cfg.pattern_period
+
+        def period_fn(x, blk_stack):
+            aux = jnp.zeros((), F32)
+            for j in range(period):
+                x, _, a = _block_apply(cfg, j, blk_stack[j], x, positions,
+                                       chunk=chunk)
+                aux = aux + a
+            return _constrain(x, BATCH_AXES, None, None), aux
+
+        if cfg.remat:
+            period_fn = jax.checkpoint(period_fn)
+
+        def scan_body(carry, blk_stack):
+            x, aux = carry
+            x, a = period_fn(x, blk_stack)
+            return (x, aux + a), None
+
+        (x, aux_total), _ = jax.lax.scan(
+            scan_body, (x, aux_total), params["blocks_stacked"])
+        n_rep = cfg.n_layers // period
+        for j, blk in enumerate(params["blocks_tail"]):
+            x, _, a = _block_apply(cfg, n_rep * period + j, blk, x,
+                                   positions, chunk=chunk)
+            aux_total = aux_total + a
+
+    return _head(cfg, params, x), aux_total
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step)
+# ---------------------------------------------------------------------------
+
+def _layer_cache_spec(cfg: ArchConfig, i: int, batch: int,
+                      seq_len: int) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+    kind = cfg.layer_kind(i)
+    if kind == "mamba":
+        return {
+            "conv": jax.ShapeDtypeStruct(
+                (batch, cfg.ssm_conv - 1, cfg.d_inner + 2 * cfg.ssm_state),
+                dt),
+            "ssm": jax.ShapeDtypeStruct(
+                (batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim), F32),
+            "length": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+    cap = min(cfg.window, seq_len) if kind == "local" else seq_len
+    kv = jax.ShapeDtypeStruct((batch, cap, cfg.n_kv_heads, hd), dt)
+    return {"k": kv, "v": kv, "length": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def cache_spec(cfg: ArchConfig, batch: int, seq_len: int, *,
+               stacked: bool = False) -> dict:
+    """ShapeDtypeStruct tree for the decode cache (no allocation)."""
+    if not stacked:
+        return {"layers": [_layer_cache_spec(cfg, i, batch, seq_len)
+                           for i in range(cfg.n_layers)]}
+    period = cfg.pattern_period
+    n_rep = cfg.n_layers // period
+
+    def stack(s):
+        return jax.ShapeDtypeStruct((n_rep,) + s.shape, s.dtype)
+
+    return {
+        "stacked": [jax.tree_util.tree_map(
+            stack, _layer_cache_spec(cfg, j, batch, seq_len))
+            for j in range(period)],
+        "tail": [_layer_cache_spec(cfg, n_rep * period + j, batch, seq_len)
+                 for j in range(cfg.n_layers - n_rep * period)],
+    }
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int, *,
+               length: int = 0, stacked: bool = False) -> dict:
+    zeros = jax.tree_util.tree_map(
+        lambda s: jnp.full(s.shape, length, s.dtype)
+        if s.dtype == jnp.int32 and len(s.shape) <= 1
+        else jnp.zeros(s.shape, s.dtype),
+        cache_spec(cfg, batch, seq_len, stacked=stacked))
+    return zeros
+
+
+def decode_step(cfg: ArchConfig, params: dict, cache: dict, tokens, *,
+                positions=None):
+    """One-token decode. tokens (B,1) int32. Returns (logits, new_cache).
+    Handles both unrolled ("layers") and stacked cache/param layouts."""
+    x = params["embed"][tokens]
+    b = x.shape[0]
+    if "layers" in cache:
+        ln = cache["layers"][0]["length"]
+    elif cache["stacked"]:
+        ln = cache["stacked"][0]["length"][0]
+    else:
+        ln = cache["tail"][0]["length"]
+    if positions is None:
+        positions = jnp.broadcast_to(ln[None, None], (b, 1)).astype(jnp.int32)
+        if cfg.mrope_sections:
+            positions = jnp.broadcast_to(positions[None], (3, b, 1))
+
+    if "layers" in cache:
+        new_layers = []
+        for i, blk in enumerate(params["blocks"]):
+            x, new_c, _ = _block_apply(cfg, i, blk, x, positions,
+                                       cache=cache["layers"][i])
+            new_layers.append(new_c)
+        return _head(cfg, params, x), {"layers": new_layers}
+
+    period = cfg.pattern_period
+    n_rep = cfg.n_layers // period
+
+    def scan_body(x, xs):
+        blk_stack, cache_stack = xs
+        new_stack = []
+        for j in range(period):
+            x, new_c, _ = _block_apply(cfg, j, blk_stack[j], x, positions,
+                                       cache=cache_stack[j])
+            new_stack.append(new_c)
+        return x, new_stack
+
+    x, new_stacked = jax.lax.scan(
+        scan_body, x, (params["blocks_stacked"], cache["stacked"]))
+    new_tail = []
+    for j, blk in enumerate(params["blocks_tail"]):
+        x, new_c, _ = _block_apply(cfg, n_rep * period + j, blk, x,
+                                   positions, cache=cache["tail"][j])
+        new_tail.append(new_c)
+    return _head(cfg, params, x), {"stacked": new_stacked, "tail": new_tail}
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def loss_fn(cfg: ArchConfig, params: dict, batch: dict, *,
+            aux_weight: float = 0.01, chunk: int = 2048):
+    logits, aux = forward(cfg, params, batch, chunk=chunk)
+    # CE via select+reduce (NOT take_along_axis: a gather along the
+    # model-sharded vocab axis would force logit replication)
+    lf = logits.astype(F32)
+    m = jax.lax.stop_gradient(jnp.max(lf, axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1)) + m[..., 0]
+    vocab_iota = jnp.arange(lf.shape[-1], dtype=jnp.int32)
+    gold = jnp.sum(jnp.where(vocab_iota == batch["labels"][..., None],
+                             lf, 0.0), axis=-1)
+    ce = jnp.mean(lse - gold)
+    metrics = {"ce": ce, "aux": aux}
+    return ce + aux_weight * aux, metrics

@@ -1,0 +1,168 @@
+"""Mamba2 SSD (state-space duality) block with chunked scan.
+
+Structural tie to the paper (DESIGN.md Sec. 5): the chunked SSD algorithm IS
+wavefront temporal blocking of a linear recurrence — the chunk is the in-fast-
+memory time block (intra-chunk work in quadratic "attention" form = the
+diamond interior), and the carried state is the wavefront sliding across
+chunks. The inter-chunk state recurrence is the only sequential part and is
+O(L/Q * H*N*P) flops — negligible — so it runs as a lax.scan (its once-counted
+cost does not perturb HLO flop accounting; the heavy intra-chunk einsums are
+fully batched and counted exactly).
+
+Single-token decode is the pure recurrence on (conv_state, ssm_state).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.params import ParamSpec
+
+F32 = jnp.float32
+
+
+def mamba_specs(cfg: ArchConfig, dtype: str) -> dict:
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    h = cfg.ssm_heads
+    conv_dim = di + 2 * n
+    return {
+        # separate projections (vs the reference's fused in_proj): each dim
+        # is cleanly shardable on 'model'
+        "wz": ParamSpec((d, di), ("embed", "ssm_inner"), dtype),
+        "wx": ParamSpec((d, di), ("embed", "ssm_inner"), dtype),
+        "wbc": ParamSpec((d, 2 * n), ("embed", None), dtype),
+        "wdt": ParamSpec((d, h), ("embed", None), dtype),
+        "conv_w": ParamSpec((cfg.ssm_conv, conv_dim), (None, "ssm_inner"),
+                            dtype),
+        "conv_b": ParamSpec((conv_dim,), ("ssm_inner",), "float32",
+                            init_scale=0.0),
+        "a_log": ParamSpec((h,), (None,), "float32"),
+        "d_skip": ParamSpec((h,), (None,), "float32"),
+        "dt_bias": ParamSpec((h,), (None,), "float32", init_scale=0.0),
+        "norm": ParamSpec((di,), ("ssm_inner",), "float32"),
+        "out_proj": ParamSpec((di, d), ("ssm_inner", "embed"), dtype),
+    }
+
+
+def _causal_conv(xbc, w, b, state=None):
+    """Depthwise causal conv. xbc (B,L,C); w (K,C). state: (B,K-1,C) for
+    decode. Returns (out, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros_like(xbc[:, :k - 1])
+        full = jnp.concatenate([pad, xbc], axis=1)
+        new_state = full[:, full.shape[1] - (k - 1):]
+    else:
+        full = jnp.concatenate([state, xbc], axis=1)
+        new_state = full[:, full.shape[1] - (k - 1):]
+    out = sum(full[:, i:full.shape[1] - (k - 1) + i] * w[i] for i in range(k))
+    return jax.nn.silu(out + b), new_state
+
+
+def _segsum(dA):
+    """dA (..., Q) -> (..., Q, Q) lower-triangular cumulative sums:
+    out[i,j] = sum_{j < m <= i} dA[m] for i >= j else -inf."""
+    q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]   # sum_{j<m<=i}
+    ii = jnp.arange(q)
+    mask = ii[:, None] >= ii[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(xh, dt, a, bmat, cmat, chunk: int):
+    """SSD forward. xh (B,L,H,P); dt (B,L,H) (post-softplus); a (H,) < 0;
+    bmat/cmat (B,L,N) shared across heads (n_groups=1). Returns (B,L,H,P)."""
+    b, l, h, p = xh.shape
+    n = bmat.shape[-1]
+    q = min(chunk, l)
+    assert l % q == 0, (l, q)
+    nc = l // q
+
+    xc = xh.reshape(b, nc, q, h, p)
+    dtc = dt.reshape(b, nc, q, h)
+    bc = bmat.reshape(b, nc, q, n).astype(F32)
+    cc = cmat.reshape(b, nc, q, n).astype(F32)
+    da = dtc * a                                   # (B,nc,Q,H) log-decay
+    da_t = jnp.moveaxis(da, -1, -2)                # (B,nc,H,Q)
+
+    # intra-chunk (the "diamond interior", quadratic in Q)
+    lmask = jnp.exp(_segsum(da_t))                 # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bcin,bcjn->bcij", cc, bc) # (B,nc,Q,Q)
+    w = scores[:, :, None] * lmask                 # (B,nc,H,Q,Q)
+    xdt = xc * dtc[..., None]                      # weight inputs by dt
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp",
+                         w, xdt.astype(F32))
+
+    # chunk state contributions: S_c = sum_j exp(cum_end - cum_j) dt_j B_j x_j
+    cum = jnp.cumsum(da_t, axis=-1)                # (B,nc,H,Q)
+    decay_to_end = jnp.exp(cum[..., -1:] - cum)    # (B,nc,H,Q)
+    sc = jnp.einsum("bchj,bcjn,bcjhp->bchnp",
+                    decay_to_end, bc, xdt.astype(F32))
+    chunk_decay = jnp.exp(cum[..., -1])            # (B,nc,H)
+
+    # inter-chunk wavefront: tiny sequential state carry
+    def carry(s_prev, inputs):
+        s_c, dec = inputs
+        s_new = dec[..., None, None] * s_prev + s_c
+        return s_new, s_prev                      # emit state ENTERING chunk
+
+    s0 = jnp.zeros((b, h, n, p), F32)
+    _, s_in = jax.lax.scan(carry, s0,
+                           (jnp.moveaxis(sc, 1, 0),
+                            jnp.moveaxis(chunk_decay, 1, 0)))
+    s_in = jnp.moveaxis(s_in, 0, 1)                # (B,nc,H,N,P)
+
+    # contribution of the entering state to every position in the chunk
+    state_decay = jnp.exp(cum)                     # (B,nc,H,Q)
+    y_inter = jnp.einsum("bcin,bchi,bchnp->bcihp",
+                         cc, state_decay, s_in)
+    y = (y_intra + y_inter).reshape(b, l, h, p)
+    return y.astype(xh.dtype)
+
+
+def mamba_block(pp, cfg: ArchConfig, x, *, cache=None, chunk: int = 256):
+    """x (B,L,D) -> (y, new_cache). cache = {"conv","ssm","length"} for
+    decode (L == 1)."""
+    b, l, d = x.shape
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    p = cfg.ssm_head_dim
+    z = x @ pp["wz"]
+    xs = x @ pp["wx"]
+    bcmat = x @ pp["wbc"]
+    dt = x @ pp["wdt"]
+    a = -jnp.exp(pp["a_log"])                       # (H,) negative
+    dt = jax.nn.softplus(dt.astype(F32) + pp["dt_bias"])  # (B,L,H)
+
+    xbc = jnp.concatenate([xs, bcmat], axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    xbc, new_conv = _causal_conv(xbc, pp["conv_w"], pp["conv_b"], conv_state)
+    xs, bmat, cmat = (xbc[..., :di], xbc[..., di:di + n],
+                      xbc[..., di + n:])
+    xh = xs.reshape(b, l, h, p)
+
+    if cache is None:
+        y = ssd_chunked(xh, dt, a, bmat, cmat, chunk)
+        new_cache = None
+    else:
+        # single-step recurrence: s' = exp(dt*a) s + dt * B (x) ; y = C s' + D x
+        s = cache["ssm"]                            # (B,H,N,P) f32
+        dt1 = dt[:, 0]                              # (B,H)
+        dec = jnp.exp(dt1 * a)                      # (B,H)
+        outer = jnp.einsum("bn,bhp->bhnp", bmat[:, 0].astype(F32),
+                           (xh[:, 0] * dt1[..., None]).astype(F32))
+        s = dec[..., None, None] * s + outer
+        y = jnp.einsum("bn,bhnp->bhp", cmat[:, 0].astype(F32), s)
+        y = y[:, None].astype(x.dtype)              # (B,1,H,P)
+        new_cache = {"conv": new_conv, "ssm": s,
+                     "length": cache["length"] + 1}
+
+    y = y + xh * pp["d_skip"][:, None].astype(x.dtype)
+    y = y.reshape(b, l, di)
+    # gated RMSNorm (mamba2's norm before out_proj)
+    yf = y.astype(F32) * jax.nn.silu(z.astype(F32))
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + cfg.norm_eps) * pp["norm"]
+    return yf.astype(x.dtype) @ pp["out_proj"], new_cache

@@ -1,0 +1,86 @@
+"""Capacity-routed MoE (GShard/Switch style), scatter/gather formulation.
+
+The (T, E, C) one-hot dispatch tensor of the classic formulation is
+intractable at kimi-k2 scale (384 experts); instead tokens are routed via a
+sort-free scatter: per-token (expert, slot) indices computed with cumulative
+counts, tokens scatter-added into the (E, C, D) expert buffer, expert FFNs run
+batched, outputs gather back weighted by the (renormalized) router probs.
+Expert-parallelism: the E axis carries the "experts" logical axis -> 'model'.
+
+Aux loss: standard load-balance loss E * sum_e f_e * p_e.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.params import ParamSpec
+
+F32 = jnp.float32
+
+
+def moe_specs(cfg: ArchConfig, dtype: str) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": ParamSpec((d, e), ("embed", None), "float32"),
+        "wi_gate": ParamSpec((e, d, f), ("experts", "embed", "mlp"), dtype),
+        "wi_up": ParamSpec((e, d, f), ("experts", "embed", "mlp"), dtype),
+        "wo": ParamSpec((e, f, d), ("experts", "mlp", "embed"), dtype),
+    }
+
+
+def capacity(cfg: ArchConfig, n_tokens: int) -> int:
+    c = int(n_tokens * cfg.experts_per_token * cfg.capacity_factor
+            / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)  # round up to 8
+
+
+def moe_ffn(p, cfg: ArchConfig, x, act: str):
+    """x: (B,S,D) -> (y, aux_loss)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    t = b * s
+    xf = x.reshape(t, d)
+    cap = capacity(cfg, t)
+
+    logits = (xf.astype(F32) @ p["router"])            # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)      # (T,K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # slot assignment: position of token-assignment within its expert, in
+    # (token, k) order — exclusive cumulative count over the flat (T*K) list
+    flat_e = gate_idx.reshape(-1)                      # (T*K,)
+    onehot_order = jnp.argsort(flat_e, stable=True)
+    counts = jnp.zeros((e,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                              jnp.cumsum(counts)[:-1]])
+    pos_sorted = jnp.arange(t * k, dtype=jnp.int32) - starts[flat_e[onehot_order]]
+    pos = jnp.zeros((t * k,), jnp.int32).at[onehot_order].set(pos_sorted)
+    keep = pos < cap
+    slot = flat_e * cap + jnp.minimum(pos, cap - 1)    # (T*K,)
+
+    # dispatch: scatter-add token activations into the expert buffer
+    xk = jnp.repeat(xf, k, axis=0)                     # (T*K, D) token per k
+    buf = jnp.zeros((e * cap, d), x.dtype).at[slot].add(
+        jnp.where(keep[:, None], xk, 0))
+    buf = buf.reshape(e, cap, d)
+
+    # expert FFNs, batched over E (sharded on 'model')
+    nonlin = jax.nn.gelu if act == "gelu" else jax.nn.silu
+    h = nonlin(jnp.einsum("ecd,edf->ecf", buf, p["wi_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, p["wi_up"])
+    out = jnp.einsum("ecf,efd->ecd", h, p["wo"]).reshape(e * cap, d)
+
+    # combine: gather each assignment's output, weight, sum over k
+    yk = out[slot] * (gate_vals.reshape(-1, 1) * keep[:, None]).astype(x.dtype)
+    y = jnp.sum(yk.reshape(t, k, d), axis=1).reshape(b, s, d)
+
+    # load-balance aux loss: fraction of assignments vs mean router prob
+    me = counts.astype(F32) / (t * k)
+    pe = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(me * pe)
+    return y, aux

@@ -1,0 +1,60 @@
+"""Parameter specs with logical sharding axes.
+
+Every parameter is declared once as a ParamSpec (shape, dtype, logical axes);
+the same tree drives (a) real initialization for smoke tests/examples,
+(b) ShapeDtypeStruct trees for the dry-run (no allocation), and (c) the
+logical->mesh sharding rules (training.sharding).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]       # logical axis names, len == ndim
+    dtype: str = "bfloat16"
+    init_scale: float = 1.0            # stddev multiplier over fan-in rule
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+    @property
+    def sds(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, jnp.dtype(self.dtype))
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_sds(spec_tree):
+    return jax.tree_util.tree_map(lambda s: s.sds, spec_tree, is_leaf=is_spec)
+
+
+def tree_init(spec_tree, seed: int = 0):
+    """Deterministic host-side init (smoke tests / examples)."""
+    flat, treedef = jax.tree_util.tree_flatten(spec_tree, is_leaf=is_spec)
+    out = []
+    for i, s in enumerate(flat):
+        rng = np.random.default_rng((seed, i))
+        fan_in = s.shape[0] if len(s.shape) == 1 else int(np.prod(s.shape[:-1]))
+        if len(s.shape) == 1:  # norm scales & biases
+            arr = np.ones(s.shape, np.float32) if s.init_scale else \
+                np.zeros(s.shape, np.float32)
+        else:
+            std = s.init_scale / np.sqrt(max(fan_in, 1))
+            arr = rng.standard_normal(s.shape).astype(np.float32) * std
+        out.append(jnp.asarray(arr, jnp.dtype(s.dtype)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def count_params(spec_tree) -> int:
+    return sum(int(np.prod(s.shape)) for s in
+               jax.tree_util.tree_leaves(spec_tree, is_leaf=is_spec))

@@ -1,0 +1,5 @@
+from repro.optim.optimizers import (Optimizer, adamw, adafactor,
+                                    make_optimizer, warmup_cosine)
+
+__all__ = ["Optimizer", "adamw", "adafactor", "make_optimizer",
+           "warmup_cosine"]

@@ -1,0 +1,144 @@
+"""Optimizers: AdamW and Adafactor (factored second moment, for the 398B/1T
+architectures where full m/v state would not fit 512 x 16 GB HBM).
+
+Pure-pytree implementation (no optax dependency): an Optimizer is a pair of
+functions (init, update) with state as a pytree, so the whole train state
+checkpoints through distributed.checkpoint unchanged.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable   # (grads, state, params, step) -> (updates, new_state)
+
+
+def warmup_cosine(peak_lr: float, warmup: int = 100, total: int = 10000,
+                  floor: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * (step + 1) / warmup
+        frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+def adamw(lr=1e-3, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree_util.tree_map(zeros, params),
+                "v": jax.tree_util.tree_map(zeros, params)}
+
+    def update(grads, state, params, step):
+        step_f = jnp.asarray(step, jnp.float32) + 1.0
+        lr_t = lr_fn(step)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mhat = m / (1 - b1 ** step_f)
+            vhat = v / (1 - b2 ** step_f)
+            u = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * u).astype(p.dtype), m, v
+
+        flat_g, tree = jax.tree_util.tree_flatten(grads)
+        flat_m = jax.tree_util.tree_leaves(state["m"])
+        flat_v = jax.tree_util.tree_leaves(state["v"])
+        flat_p = jax.tree_util.tree_leaves(params)
+        out = [upd(*t) for t in zip(flat_g, flat_m, flat_v, flat_p)]
+        unf = lambda i: jax.tree_util.tree_unflatten(tree, [o[i] for o in out])
+        return unf(0), {"m": unf(1), "v": unf(2)}
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr=1e-2, decay=0.8, eps1=1e-30, eps2=1e-3,
+              clip_threshold=1.0) -> Optimizer:
+    """Shazeer & Stern 2018, momentum-free: O(n+m) state for (n,m) matrices."""
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def _factored(shape) -> bool:
+        return len(shape) >= 2
+
+    def init(params):
+        def one(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return jax.tree_util.tree_map(one, params,
+                                      is_leaf=lambda x: hasattr(x, "shape"))
+
+    def update(grads, state, params, step):
+        step_f = jnp.asarray(step, jnp.float32) + 1.0
+        beta = 1.0 - step_f ** (-decay)
+        lr_t = lr_fn(step)
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps1
+            if _factored(g.shape):
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rfac = (vr / jnp.mean(vr, axis=-1, keepdims=True))[..., None]
+                u = g * jax.lax.rsqrt(rfac * vc[..., None, :] + eps1)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v + eps1)
+                new_s = {"v": v}
+            # update clipping (RMS)
+            rms_u = jnp.sqrt(jnp.mean(u * u) + eps1)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            scale = jnp.maximum(eps2, jnp.sqrt(jnp.mean(
+                p.astype(jnp.float32) ** 2)))  # relative step size
+            return (-lr_t * scale * u).astype(p.dtype), new_s
+
+        is_state = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+        flat_g, tree = jax.tree_util.tree_flatten(grads)
+        flat_s = jax.tree_util.tree_leaves(state, is_leaf=is_state)
+        flat_p = jax.tree_util.tree_leaves(params)
+        out = [upd(*t) for t in zip(flat_g, flat_s, flat_p)]
+        updates = jax.tree_util.tree_unflatten(tree, [o[0] for o in out])
+        new_state = jax.tree_util.tree_unflatten(tree, [o[1] for o in out])
+        return updates, new_state
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(kind: str, lr=None) -> Optimizer:
+    if kind == "adamw":
+        return adamw(lr=lr or 3e-4)
+    if kind == "adafactor":
+        return adafactor(lr=lr or 1e-2)
+    raise ValueError(f"unknown optimizer {kind!r}")
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: p + u.astype(p.dtype),
+                                  params, updates)

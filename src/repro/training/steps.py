@@ -1,0 +1,163 @@
+"""train_step / serve_step builders + input_specs for every (arch x shape).
+
+input_specs returns weak-type-correct ShapeDtypeStruct stand-ins (no device
+allocation) plus the matching shardings — the dry-run lowers against these.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES, ArchConfig
+from repro.models import lm
+from repro.models.params import tree_sds
+from repro.optim import make_optimizer
+from repro.optim.optimizers import apply_updates, clip_by_global_norm
+from repro.training import sharding as shd
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ArchConfig, *, lr=None, aux_weight: float = 0.01,
+                    chunk: int = 2048, accum: int = 1,
+                    stacked: bool = False):
+    """accum > 1: microbatch gradient accumulation (python-unrolled: exact
+    HLO cost accounting, activation peak / accum). Grads accumulate in f32."""
+    opt = make_optimizer(cfg.optimizer, lr)
+
+    spec_tree = lm.param_specs(cfg, stacked=stacked)
+
+    def train_step(state, batch):
+        params, opt_state, step = state["params"], state["opt"], state["step"]
+
+        def lf(p, mb):
+            return lm.loss_fn(cfg, p, mb, aux_weight=aux_weight, chunk=chunk)
+
+        grad_fn = jax.value_and_grad(lf, has_aux=True)
+        b = jax.tree_util.tree_leaves(batch)[0].shape[0]
+        k = accum if b % accum == 0 else 1
+        loss = 0.0
+        metrics = None
+        grads = None
+        for i in range(k):
+            mb = {key: (v[:, i * (v.shape[1] // k):(i + 1) * (v.shape[1] // k)]
+                        if key == "positions" and v.ndim == 3
+                        else v[i * (b // k):(i + 1) * (b // k)])
+                  for key, v in batch.items()}
+            (ls, mt), g = grad_fn(params, mb)
+            g = shd.constrain_like_params(g, spec_tree)
+            acc_dtype = jnp.dtype(cfg.grad_dtype)
+            gf = jax.tree_util.tree_map(
+                lambda x: (x.astype(acc_dtype) / k), g)
+            grads = gf if grads is None else jax.tree_util.tree_map(
+                jnp.add, grads, gf)
+            grads = shd.constrain_like_params(grads, spec_tree)
+            loss = loss + ls / k
+            mt = jax.tree_util.tree_map(lambda x: x / k, mt)
+            metrics = mt if metrics is None else \
+                jax.tree_util.tree_map(jnp.add, metrics, mt)
+
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        updates, new_opt = opt.update(grads, opt_state, params, step)
+        new_params = apply_updates(params, updates)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return {"params": new_params, "opt": new_opt, "step": step + 1}, metrics
+
+    return opt, train_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    def serve_step(params, cache, tokens):
+        logits, new_cache = lm.decode_step(cfg, params, cache, tokens)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], logits, new_cache
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ArchConfig, *, chunk: int = 2048):
+    def prefill_step(params, batch):
+        logits, _ = lm.forward(cfg, params, batch, chunk=chunk)
+        return logits
+
+    return prefill_step
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs for the dry-run
+# ---------------------------------------------------------------------------
+
+def train_state_specs(cfg: ArchConfig, *, stacked: bool = False):
+    """(state_sds, state_shardings_fn(mesh)) for the full train state."""
+    pspecs = lm.param_specs(cfg, stacked=stacked)
+    params_sds = tree_sds(pspecs)
+    opt = make_optimizer(cfg.optimizer)
+    opt_sds = jax.eval_shape(opt.init, params_sds)
+    state_sds = {"params": params_sds, "opt": opt_sds,
+                 "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    def shardings(mesh):
+        return {
+            "params": shd.param_shardings(mesh, pspecs),
+            "opt": shd.opt_state_shardings(mesh, pspecs, opt_sds),
+            "step": NamedSharding(mesh, P()),
+        }
+
+    return state_sds, shardings
+
+
+def input_specs(cfg: ArchConfig, shape_name: str, *, stacked: bool = False):
+    """(inputs_sds, shardings_fn(mesh)) for one (arch x shape) cell.
+
+    train:   {"batch": {tokens|embeds [, positions], labels}}
+    prefill: {"batch": {tokens|embeds [, positions]}}
+    decode:  {"cache": ..., "tokens": (B,1)}
+    """
+    s = SHAPES[shape_name]
+    b, seq = s["global_batch"], s["seq_len"]
+    kind = s["kind"]
+    i32 = jnp.int32
+
+    def batch_specs(with_labels: bool):
+        d: dict = {}
+        if cfg.frontend == "none":
+            d["tokens"] = jax.ShapeDtypeStruct((b, seq), i32)
+        else:
+            d["embeds"] = jax.ShapeDtypeStruct((b, seq, cfg.d_model),
+                                               jnp.dtype(cfg.dtype))
+        if cfg.mrope_sections:
+            d["positions"] = jax.ShapeDtypeStruct((3, b, seq), i32)
+        if with_labels:
+            d["labels"] = jax.ShapeDtypeStruct((b, seq), i32)
+        return d
+
+    if kind == "train":
+        inputs = {"batch": batch_specs(with_labels=True)}
+    elif kind == "prefill":
+        inputs = {"batch": batch_specs(with_labels=False)}
+    else:  # decode: one new token against a seq_len cache
+        inputs = {"cache": lm.cache_spec(cfg, b, seq, stacked=stacked),
+                  "tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+
+    def shardings(mesh):
+        if kind in ("train", "prefill"):
+            bs: dict = {}
+            for k, v in inputs["batch"].items():
+                bdim = 1 if k == "positions" else 0
+                bs[k] = shd.data_sharding(mesh, len(v.shape), batch_dim=bdim)
+            return {"batch": bs}
+        seq_shard = b == 1  # long-context: shard KV sequence over 'data'
+        return {
+            "cache": shd.cache_shardings(mesh, cfg, inputs["cache"],
+                                         seq_shard=seq_shard),
+            "tokens": shd.data_sharding(mesh, 2) if b > 1
+            else NamedSharding(mesh, P()),
+        }
+
+    return inputs, shardings

@@ -1,0 +1,66 @@
+"""Checkpoint: atomicity, roundtrip, GC, async, elastic restore."""
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed import checkpoint as ck
+
+
+def _tree():
+    return {"a": jnp.arange(6.0).reshape(2, 3),
+            "nested": {"b": jnp.ones((4,), jnp.int32)},
+            "step_scalar": jnp.zeros(())}
+
+
+def test_roundtrip(tmp_path):
+    d = str(tmp_path)
+    ck.save(d, 7, _tree())
+    step, out = ck.restore(d, _tree())
+    assert step == 7
+    np.testing.assert_array_equal(np.asarray(out["a"]),
+                                  np.asarray(_tree()["a"]))
+
+
+def test_uncommitted_checkpoint_ignored(tmp_path):
+    d = str(tmp_path)
+    ck.save(d, 1, _tree())
+    # fake a torn write: step dir without COMMIT
+    os.makedirs(os.path.join(d, "step_0000000009"))
+    assert ck.latest_step(d) == 1
+
+
+def test_keep_last_gc(tmp_path):
+    d = str(tmp_path)
+    for s in range(6):
+        ck.save(d, s, _tree(), keep_last=3)
+    assert ck.all_steps(d) == [3, 4, 5]
+
+
+def test_missing_leaf_raises(tmp_path):
+    d = str(tmp_path)
+    ck.save(d, 0, {"a": jnp.zeros((2,))})
+    with pytest.raises(ValueError):
+        ck.restore(d, _tree())
+
+
+def test_async_checkpointer(tmp_path):
+    d = str(tmp_path)
+    c = ck.AsyncCheckpointer(d)
+    for s in (10, 20):
+        c.save(s, _tree())
+    c.wait_pending()
+    assert ck.latest_step(d) == 20
+
+
+def test_restore_with_sharding_fn(tmp_path):
+    import jax
+    d = str(tmp_path)
+    ck.save(d, 3, _tree())
+    dev = jax.devices()[0]
+    step, out = ck.restore(d, _tree(),
+                           sharding_fn=lambda name, leaf:
+                           jax.sharding.SingleDeviceSharding(dev))
+    assert out["a"].sharding.device_set == {dev}

@@ -1,0 +1,105 @@
+"""Multi-device tests in a subprocess (8 forced host devices).
+
+The subprocess is needed because the main test process must keep the real
+single-device view (see conftest). One subprocess runs all checks to amortize
+startup.
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, sys.argv[1])
+import jax, jax.numpy as jnp
+import numpy as np
+from functools import partial
+from repro.core import stencils as st
+from repro.distributed import stepper, compression, checkpoint
+from repro.distributed.stepper import GridSharding
+
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+
+# 1. distributed deep-halo stepper == naive, all four stencils
+for name in st.SPECS:
+    spec = st.SPECS[name]
+    shape = (8, 8, 16) if spec.radius == 1 else (32, 16, 18)
+    state, coeffs = st.make_problem(spec, shape, seed=7)
+    T = 5
+    want = st.run_naive(spec, state, coeffs, T)
+    got = stepper.run_distributed(spec, mesh, state, coeffs, T, t_block=2)
+    err = float(jnp.max(jnp.abs(want[0] - jax.device_get(got[0]))))
+    assert err < 1e-4, (name, err)
+print("stepper OK")
+
+# 1b. hoisted-coefficient variant (one-time halo exchange) is equivalent
+spec = st.SPECS["7pt-var"]
+state, coeffs = st.make_problem(spec, (8, 8, 16), seed=3)
+want = st.run_naive(spec, state, coeffs, 4)
+got = stepper.run_distributed(spec, mesh, state, coeffs, 4, t_block=2,
+                              hoisted=True)
+assert float(jnp.max(jnp.abs(want[0] - jax.device_get(got[0])))) < 1e-4
+print("hoisted OK")
+
+# 2. int8 error-feedback compressed pmean: exact for equal grads,
+#    residual-bounded otherwise, converges under accumulation
+def pod_mean(g, err):
+    f = jax.shard_map(lambda g, e: compression.compressed_pmean(g, e, "pod"),
+                      mesh=mesh, in_specs=(jax.P("pod"), jax.P("pod")),
+                      out_specs=(jax.P("pod"), jax.P("pod")))
+    return f(g, err)
+
+g = jnp.stack([jnp.full((4,), 2.0), jnp.full((4,), 2.0)])   # same on 2 pods
+out, err = pod_mean(g, jnp.zeros_like(g))
+assert np.allclose(np.asarray(out), 2.0, atol=1e-2), out
+
+rng = np.random.default_rng(0)
+g = jnp.asarray(rng.standard_normal((2, 64)), jnp.float32)
+true_mean = np.asarray(g).mean(axis=0)
+errbuf = jnp.zeros_like(g)
+acc = np.zeros((2, 64), np.float32)
+for i in range(20):
+    out, errbuf = pod_mean(g, errbuf)
+    acc += np.asarray(out)
+# error feedback: the time-average converges to the true mean
+est = acc / 20
+assert np.abs(est - true_mean[None]).max() < 0.02, np.abs(est - true_mean).max()
+print("compression OK")
+
+# 3. sharded save -> restore onto a DIFFERENT (smaller) mesh
+spec = st.SPECS["7pt-const"]
+state, coeffs = st.make_problem(spec, (8, 8, 16), seed=1)
+out = stepper.run_distributed(spec, mesh, state, coeffs, 2, t_block=2)
+d = sys.argv[2]
+checkpoint.save(d, 2, {"cur": out[0], "prev": out[1]})
+small = jax.make_mesh((2, 2), ("data", "model"),
+                      axis_types=(jax.sharding.AxisType.Auto,) * 2,
+                      devices=jax.devices()[:4])
+gs = GridSharding(small)
+_, restored = checkpoint.restore(d, {"cur": out[0], "prev": out[1]},
+                                 sharding_fn=lambda n, l: gs.sharding())
+out2 = stepper.run_distributed(spec, small,
+                               (restored["cur"], restored["prev"]),
+                               coeffs, 3, t_block=1)
+want = st.run_naive(spec, state, coeffs, 5)
+err = float(jnp.max(jnp.abs(want[0] - jax.device_get(out2[0]))))
+assert err < 1e-4, err
+print("elastic OK")
+print("ALL_SUBPROCESS_OK")
+"""
+
+
+@pytest.mark.slow
+def test_distributed_subprocess(tmp_path):
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT, src, str(tmp_path)],
+        capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "ALL_SUBPROCESS_OK" in proc.stdout, proc.stdout

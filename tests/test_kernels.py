@@ -1,0 +1,81 @@
+"""Per-kernel validation vs the pure-jnp oracle: shape & dtype sweeps."""
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import stencils as st
+from repro.kernels import ops, ref
+
+SHAPES_R1 = [(6, 10, 12), (10, 20, 24), (9, 17, 31)]
+SHAPES_R4 = [(10, 18, 14), (13, 21, 18)]
+
+
+def _err(a, b):
+    return float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                 - b.astype(jnp.float32))))
+
+
+def _tol(dtype):
+    return 5e-4 if dtype == jnp.float32 else 2e-1
+
+
+@pytest.mark.parametrize("name", list(st.SPECS))
+@pytest.mark.parametrize("si", [0, 1])
+@pytest.mark.parametrize("t_steps", [1, 3])
+def test_sweep_kernel(name, si, t_steps):
+    spec = st.SPECS[name]
+    shape = (SHAPES_R1 if spec.radius == 1 else SHAPES_R4)[si]
+    state, coeffs = st.make_problem(spec, shape, seed=si)
+    want = ref.naive_steps(spec, state, coeffs, t_steps)
+    got = ops.spatial(spec, state, coeffs, t_steps, bz=4)
+    assert _err(want[0], got[0]) < 5e-4
+
+
+@pytest.mark.parametrize("name", list(st.SPECS))
+@pytest.mark.parametrize("t_steps,t_block", [(2, 2), (5, 3)])
+def test_ghostzone_kernel(name, t_steps, t_block):
+    spec = st.SPECS[name]
+    shape = SHAPES_R1[1] if spec.radius == 1 else SHAPES_R4[0]
+    state, coeffs = st.make_problem(spec, shape, seed=3)
+    want = ref.naive_steps(spec, state, coeffs, t_steps)
+    got = ops.ghostzone(spec, state, coeffs, t_steps, t_block=t_block,
+                        bz=4, by=8)
+    assert _err(want[0], got[0]) < 5e-4
+    assert _err(want[1], got[1]) < 5e-4
+
+
+@pytest.mark.parametrize("name", list(st.SPECS))
+@pytest.mark.parametrize("t_steps,k,n_f", [(4, 1, 2), (3, 2, 4)])
+def test_mwd_kernel(name, t_steps, k, n_f):
+    spec = st.SPECS[name]
+    d_w = 2 * spec.radius * k
+    if d_w % n_f:
+        n_f = d_w
+    shape = SHAPES_R1[1] if spec.radius == 1 else SHAPES_R4[1]
+    state, coeffs = st.make_problem(spec, shape, seed=4)
+    want = ref.naive_steps(spec, state, coeffs, t_steps)
+    got = ops.mwd(spec, state, coeffs, t_steps, d_w=d_w, n_f=n_f)
+    assert _err(want[0], got[0]) < 5e-4
+    assert _err(want[1], got[1]) < 5e-4
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kernels_dtype_sweep(dtype):
+    spec = st.SPEC_7C
+    state, coeffs = st.make_problem(spec, (8, 16, 16), dtype=dtype, seed=5)
+    want = ref.naive_steps(spec, state, coeffs, 2)
+    for fn, kw in [(ops.spatial, dict(bz=4)),
+                   (ops.ghostzone, dict(t_block=2, bz=4, by=8)),
+                   (ops.mwd, dict(d_w=4, n_f=2))]:
+        got = fn(spec, state, coeffs, 2, **kw)
+        assert got[0].dtype == dtype
+        assert _err(want[0], got[0]) < _tol(dtype), fn
+
+
+def test_mwd_kernel_nonmultiple_grid():
+    """Grid sizes not divisible by d_w / n_f / slabs still come out exact."""
+    spec = st.SPEC_7C
+    state, coeffs = st.make_problem(spec, (11, 19, 13), seed=9)
+    want = ref.naive_steps(spec, state, coeffs, 5)
+    got = ops.mwd(spec, state, coeffs, 5, d_w=8, n_f=4)
+    assert _err(want[0], got[0]) < 5e-4

@@ -1,0 +1,84 @@
+"""Attention/RoPE unit + property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import layers as L
+
+
+def _mha_reference(q, k, v, causal, window):
+    """Dense unchunked reference with GQA expansion."""
+    b, sq, h, d = q.shape
+    hkv = k.shape[2]
+    rep = h // hkv
+    kf = jnp.repeat(k, rep, axis=2)
+    vf = jnp.repeat(v, rep, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, kf).astype(jnp.float32)
+    logits *= d ** -0.5
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    if causal:
+        m = qpos >= kpos
+        if window:
+            m &= (qpos - kpos) < window
+        logits = jnp.where(m, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, vf)
+
+
+@pytest.mark.parametrize("kind,window", [("global", 0), ("local", 5)])
+@pytest.mark.parametrize("chunk", [4, 16, 64])
+@pytest.mark.parametrize("causal", [True, False])
+def test_attention_core_matches_dense(kind, window, chunk, causal):
+    if kind == "local" and not causal:
+        pytest.skip("local windows are causal-only")
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((2, 16, 4, 8)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 16, 2, 8)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, 16, 2, 8)), jnp.float32)
+    got = L.attention_core(q, k, v, kind=kind, window=window, causal=causal,
+                           chunk=chunk)
+    want = _mha_reference(q, k, v, causal, window if kind == "local" else 0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_rope_preserves_norm_and_relative_phase():
+    pos = jnp.arange(12)[None, :]
+    cos, sin = L.rope_angles(pos, 8, 1e4)
+    x = jnp.asarray(np.random.default_rng(1).standard_normal((1, 12, 2, 8)),
+                    jnp.float32)
+    y = L.apply_rope(x, cos, sin)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-5)
+    # relative property: <rope(q,i), rope(k,j)> depends only on i-j
+    q = x[:, :1]
+    dots = []
+    for off in (0, 3):
+        cq, sq_ = L.rope_angles(jnp.array([[off]]), 8, 1e4)
+        ck, sk = L.rope_angles(jnp.array([[off + 2]]), 8, 1e4)
+        qr = L.apply_rope(q, cq, sq_)
+        kr = L.apply_rope(q, ck, sk)
+        dots.append(float(jnp.sum(qr * kr)))
+    assert abs(dots[0] - dots[1]) < 1e-3
+
+
+def test_mrope_sections():
+    pos = jnp.broadcast_to(jnp.arange(6), (3, 1, 6))
+    cos, sin = L.rope_angles(pos, 16, 1e4, sections=(2, 3, 3))
+    assert cos.shape == (1, 6, 8)
+    # identical (t,h,w) position streams == plain rope
+    cos2, sin2 = L.rope_angles(pos[0], 16, 1e4)
+    np.testing.assert_allclose(np.asarray(cos), np.asarray(cos2), rtol=1e-6)
+
+
+def test_rmsnorm_scale_invariance():
+    x = jnp.asarray(np.random.default_rng(2).standard_normal((4, 8)),
+                    jnp.float32)
+    w = jnp.ones((8,), jnp.float32)
+    y1 = L.rmsnorm(x, w)
+    y2 = L.rmsnorm(3.0 * x, w)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)

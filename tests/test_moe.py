@@ -1,0 +1,71 @@
+"""MoE routing properties (hypothesis) + numerics."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as hst
+
+from repro import configs
+from repro.models import moe
+from repro.models.params import tree_init
+
+
+def _cfg(e=4, k=2, d=16, f=32):
+    import dataclasses
+
+    from repro.configs.base import ArchConfig
+    return ArchConfig(name="t", family="moe", n_layers=1, d_model=d,
+                      n_heads=2, n_kv_heads=1, d_ff=f, vocab_size=64,
+                      n_experts=e, experts_per_token=k)
+
+
+def test_moe_output_shape_and_finite():
+    cfg = _cfg()
+    p = tree_init(moe.moe_specs(cfg, "float32"), seed=0)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((2, 8, 16)),
+                    jnp.float32)
+    y, aux = moe.moe_ffn(p, cfg, x, "silu")
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y)).all()
+    assert float(aux) >= 1.0 - 1e-3   # >= 1 by Cauchy-Schwarz at balance
+
+
+@settings(max_examples=20, deadline=None)
+@given(e=hst.sampled_from([2, 4, 8]), k=hst.integers(1, 2),
+       t=hst.integers(1, 16))
+def test_capacity_and_slots(e, k, t):
+    cfg = _cfg(e=e, k=min(k, e))
+    cap = moe.capacity(cfg, t)
+    assert cap >= 1
+    assert cap * e >= min(t * cfg.experts_per_token, cap * e)
+
+
+def test_dropped_tokens_get_partial_output():
+    """With capacity_factor ~0, most assignments drop -> y ~ 0 for dropped."""
+    import dataclasses
+    cfg = dataclasses.replace(_cfg(e=2, k=1), capacity_factor=1e-6)
+    p = tree_init(moe.moe_specs(cfg, "float32"), seed=1)
+    x = jnp.asarray(np.random.default_rng(1).standard_normal((1, 64, 16)),
+                    jnp.float32)
+    y, _ = moe.moe_ffn(p, cfg, x, "silu")
+    # capacity rounds up to 8 slots/expert -> at most 16 tokens routed
+    nonzero = int(jnp.sum(jnp.any(jnp.abs(y[0]) > 0, axis=-1)))
+    assert nonzero <= 16
+
+
+def test_expert_permutation_equivariance():
+    """Permuting expert weights does not change output (router permuted too)."""
+    cfg = _cfg(e=4, k=2)
+    p = tree_init(moe.moe_specs(cfg, "float32"), seed=2)
+    x = jnp.asarray(np.random.default_rng(2).standard_normal((1, 8, 16)),
+                    jnp.float32)
+    y1, _ = moe.moe_ffn(p, cfg, x, "silu")
+    perm = jnp.asarray([2, 0, 3, 1])
+    p2 = dict(p)
+    p2["router"] = p["router"][:, perm]
+    inv = jnp.argsort(perm)
+    for k_ in ("wi_gate", "wi_up", "wo"):
+        p2[k_] = p[k_][perm]
+    y2, _ = moe.moe_ffn(p2, cfg, x, "silu")
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-5)

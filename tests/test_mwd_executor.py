@@ -1,0 +1,39 @@
+"""MWD diamond executor == naive sweeps, for all stencils and plans."""
+
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as hst
+
+from repro.core import mwd, stencils as st
+
+
+@pytest.mark.parametrize("name", list(st.SPECS))
+@pytest.mark.parametrize("t_steps,k", [(5, 2), (8, 1)])
+def test_mwd_equals_naive(name, t_steps, k):
+    spec = st.SPECS[name]
+    d_w = 2 * spec.radius * k
+    shape = (10, 22, 12) if spec.radius == 1 else (12, 26, 14)
+    state, coeffs = st.make_problem(spec, shape, seed=7)
+    ref = st.run_naive(spec, state, coeffs, t_steps)
+    got = mwd.run_mwd(spec, state, coeffs, t_steps, mwd.MWDPlan(d_w=d_w))
+    assert float(jnp.max(jnp.abs(ref[0] - got[0]))) < 1e-4
+    assert float(jnp.max(jnp.abs(ref[1] - got[1]))) < 1e-4
+
+
+@settings(max_examples=10, deadline=None)
+@given(t_steps=hst.integers(1, 9), k=hst.sampled_from([1, 2, 3]),
+       ny=hst.sampled_from([17, 24, 33]))
+def test_mwd_equals_naive_hypothesis_7pt(t_steps, k, ny):
+    spec = st.SPEC_7C
+    state, coeffs = st.make_problem(spec, (8, ny, 10), seed=t_steps)
+    ref = st.run_naive(spec, state, coeffs, t_steps)
+    got = mwd.run_mwd(spec, state, coeffs, t_steps,
+                      mwd.MWDPlan(d_w=2 * k))
+    assert float(jnp.max(jnp.abs(ref[0] - got[0]))) < 1e-4
+
+
+def test_traffic_model_decreases_with_dw():
+    spec = st.SPEC_7V
+    bc = [mwd.traffic_per_pass(spec, mwd.MWDPlan(d_w=d), (64, 64, 64))
+          ["code_balance"] for d in (4, 8, 16, 32)]
+    assert bc == sorted(bc, reverse=True)

@@ -1,0 +1,73 @@
+"""Optimizers: convergence on a quadratic, state shapes, clipping."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import adafactor, adamw, make_optimizer, warmup_cosine
+from repro.optim.optimizers import (apply_updates, clip_by_global_norm,
+                                    global_norm)
+
+
+def _quadratic_losses(opt, steps=60):
+    params = {"w": jnp.asarray([3.0, -2.0, 1.5]),
+              "m": jnp.ones((2, 2)) * 2.0}
+    state = opt.init(params)
+    target = jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    def loss(p):
+        return sum(jnp.sum((a - b) ** 2) for a, b in
+                   zip(jax.tree_util.tree_leaves(p),
+                       jax.tree_util.tree_leaves(target)))
+
+    losses = []
+    for step in range(steps):
+        g = jax.grad(loss)(params)
+        upd, state = opt.update(g, state, params, step)
+        params = apply_updates(params, upd)
+        losses.append(float(loss(params)))
+    return losses
+
+
+@pytest.mark.parametrize("opt", [adamw(lr=0.1), adafactor(lr=0.3)])
+def test_optimizers_descend_quadratic(opt):
+    losses = _quadratic_losses(opt)
+    assert losses[-1] < 0.05 * losses[0]
+
+
+def test_adafactor_state_is_factored():
+    opt = adafactor()
+    params = {"w": jnp.zeros((8, 16)), "b": jnp.zeros((16,))}
+    st = opt.init(params)
+    assert st["w"]["vr"].shape == (8,)
+    assert st["w"]["vc"].shape == (16,)
+    assert st["b"]["v"].shape == (16,)
+
+
+def test_adafactor_state_much_smaller_than_adamw():
+    params = {"w": jnp.zeros((512, 512))}
+    n_af = sum(np.prod(x.shape) for x in
+               jax.tree_util.tree_leaves(adafactor().init(params)))
+    n_aw = sum(np.prod(x.shape) for x in
+               jax.tree_util.tree_leaves(adamw().init(params)))
+    assert n_af < n_aw / 100
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(norm) - 20.0) < 1e-4
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-3
+
+
+def test_warmup_cosine_schedule():
+    lr = warmup_cosine(1.0, warmup=10, total=100)
+    assert float(lr(0)) < float(lr(9))
+    assert abs(float(lr(10)) - 1.0) < 0.1
+    assert float(lr(99)) < float(lr(50)) < float(lr(10)) + 1e-6
+
+
+def test_make_optimizer_rejects_unknown():
+    with pytest.raises(ValueError):
+        make_optimizer("sgd9000")

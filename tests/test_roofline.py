@@ -1,0 +1,73 @@
+"""Roofline extraction: HLO collective parsing + analytic models."""
+
+import pytest
+
+from repro import configs
+from repro.configs.base import SHAPES
+from repro.launch import roofline
+from repro.models import lm
+
+
+HLO = """
+ENTRY %main {
+  %p0 = bf16[8,128]{1,0} parameter(0)
+  %ar = bf16[8,128]{1,0} all-reduce(%p0), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag = bf16[32,128]{1,0} all-gather(%p0), replica_groups=[8,4]<=[32], dimensions={0}
+  %rs = bf16[2,128]{1,0} reduce-scatter(%p0), replica_groups={{0,1,2,3}}, to_apply=%add
+  %cp = f32[16]{0} collective-permute(%x), source_target_pairs={{0,1}}
+  %a2a = (f32[4,4]{1,0}, f32[4,4]{1,0}) all-to-all(%a, %b), replica_groups={{0,1}}
+  %ard = bf16[8,128]{1,0} all-reduce-done(%ars)
+}
+"""
+
+
+def test_collective_bytes_parsing():
+    out = roofline.collective_bytes(HLO)
+    assert out["all-reduce"] == 8 * 128 * 2          # result == operand
+    assert out["all-gather"] == 32 * 128 * 2 // 4    # result / group
+    assert out["reduce-scatter"] == 2 * 128 * 2 * 4  # result * group
+    assert out["collective-permute"] == 16 * 4
+    assert out["all-to-all"] == 2 * 4 * 4 * 4        # tuple summed
+
+
+def test_start_done_not_double_counted():
+    txt = """
+  %s = bf16[8,128]{1,0} all-reduce-start(%p0), replica_groups={{0,1}}
+  %d = bf16[8,128]{1,0} all-reduce-done(%s)
+"""
+    out = roofline.collective_bytes(txt)
+    assert out["all-reduce"] == 8 * 128 * 2
+
+
+def test_model_flops_kinds():
+    cfg = configs.get("llama3.2-1b")
+    tr = roofline.model_flops(cfg, SHAPES["train_4k"], 1e9, 1e9)
+    pf = roofline.model_flops(cfg, SHAPES["prefill_32k"], 1e9, 1e9)
+    dc = roofline.model_flops(cfg, SHAPES["decode_32k"], 1e9, 1e9)
+    assert tr == 6.0 * 1e9 * 256 * 4096
+    assert pf == 2.0 * 1e9 * 32 * 32768
+    assert dc == 2.0 * 1e9 * 128
+
+
+def test_active_params_moe():
+    cfg = configs.get("mixtral-8x7b")
+    for stacked in (False, True):
+        tree = lm.param_specs(cfg, stacked=stacked)
+        total, active = roofline.active_params(cfg, tree)
+        assert total > 4.4e10
+        assert active < 0.4 * total  # top-2 of 8 experts
+
+
+def test_analytic_bytes_orders():
+    cfg = configs.get("llama3.2-1b")
+    tr = roofline.analytic_hbm_bytes(cfg, SHAPES["train_4k"], 1.24e9,
+                                     1.24e9, 512)
+    dc = roofline.analytic_hbm_bytes(cfg, SHAPES["decode_32k"], 1.24e9,
+                                     1.24e9, 512)
+    assert tr > dc                      # training streams more than decode
+    assert 1e8 < tr < 1e12
+
+
+def test_roofline_fraction_bounds():
+    t = roofline.roofline(1e12, 1e9, 1e6)
+    assert 0.33 <= t.roofline_fraction <= 1.0

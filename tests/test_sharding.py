@@ -1,0 +1,83 @@
+"""Sharding rules: divisibility fallback, dedup, cache specs."""
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.models import lm
+from repro.models.params import ParamSpec
+from repro.training import sharding as shd, steps
+
+
+def _mesh(shape=(2, 2), axes=("data", "model")):
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+                         devices=[jax.devices()[0]] * 1
+                         if False else None)
+
+
+def test_spec_pspec_basic():
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    s = ParamSpec((64, 128), ("embed", "mlp"))
+    assert shd.spec_pspec(mesh, s) == P("data", "model")
+
+
+def test_spec_pspec_divisibility_fallback():
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    # 7 not divisible by even a size-1 axis is fine; use a fake big axis via
+    # abstract mesh: use mesh of size 1 => divisible; emulate with size check
+    s = ParamSpec((7, 128), ("heads", None))
+    p = shd.spec_pspec(mesh, s)
+    assert p[0] in ("model", None)  # size-1 axis always divides
+
+
+def test_spec_pspec_dedup_expert_wins():
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    s = ParamSpec((8, 64, 128), ("experts", "embed", "mlp"))
+    p = shd.spec_pspec(mesh, s)
+    assert p == P("model", "data", None)  # mlp loses 'model' to experts
+
+
+def test_param_shardings_cover_tree():
+    mesh = jax.make_mesh((1,), ("model",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    cfg = configs.reduced(configs.get("mixtral-8x7b"))
+    tree = lm.param_specs(cfg)
+    sh = shd.param_shardings(mesh, tree)
+    n1 = len(jax.tree_util.tree_leaves(sh))
+    from repro.models.params import is_spec
+    n2 = len(jax.tree_util.tree_leaves(tree, is_leaf=is_spec))
+    assert n1 == n2
+
+
+def test_input_specs_all_cells_enumerate():
+    from repro.configs.base import SHAPES, shape_applicable
+    total = runnable = 0
+    for arch in configs.ARCH_IDS:
+        cfg = configs.get(arch)
+        for s in SHAPES:
+            total += 1
+            ok, why = shape_applicable(cfg, s)
+            if not ok:
+                assert why
+                continue
+            runnable += 1
+            inputs, sh_fn = steps.input_specs(cfg, s)
+            assert inputs
+    assert total == 40          # the assigned 40 cells
+    assert runnable == 34       # hubert x2 + 4 pure-full-attn long_500k skips
+
+
+def test_cache_shardings_rightmost_anchored():
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    cfg = configs.reduced(configs.get("gemma3-1b"))
+    for stacked in (False, True):
+        tree = lm.cache_spec(cfg, 4, 64, stacked=stacked)
+        sh = shd.cache_shardings(mesh, cfg, tree, seq_shard=False)
+        assert len(jax.tree_util.tree_leaves(sh)) == \
+            len(jax.tree_util.tree_leaves(tree))

@@ -1,0 +1,84 @@
+"""End-to-end behaviour tests for the paper's system."""
+
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import stencils as st
+from repro.core.mwd import MWDPlan, run_mwd
+from repro.distributed import checkpoint
+from repro.kernels import ops
+
+
+def test_all_methods_agree_end_to_end():
+    """naive == spatial kernel == ghost-zone kernel == MWD kernel == MWD
+    executor, over several steps (the quickstart invariant)."""
+    spec = st.SPECS["7pt-var"]
+    state, coeffs = st.make_problem(spec, (10, 18, 14), seed=0)
+    T = 6
+    ref = ops.naive(spec, state, coeffs, T)
+    outs = {
+        "spatial": ops.spatial(spec, state, coeffs, T, bz=4),
+        "gz": ops.ghostzone(spec, state, coeffs, T, t_block=3, bz=4, by=8),
+        "mwd-kern": ops.mwd(spec, state, coeffs, T, d_w=8, n_f=2),
+        "mwd-exec": run_mwd(spec, state, coeffs, T, MWDPlan(d_w=8)),
+    }
+    for k, v in outs.items():
+        assert float(jnp.max(jnp.abs(ref[0] - v[0]))) < 1e-4, k
+
+
+def test_checkpoint_restart_bit_identical():
+    """Run 8 steps straight vs 4 + checkpoint + restore + 4."""
+    spec = st.SPECS["7pt-const"]
+    state, coeffs = st.make_problem(spec, (8, 12, 10), seed=2)
+    straight = run_mwd(spec, state, coeffs, 8, MWDPlan(d_w=4))
+
+    half = run_mwd(spec, state, coeffs, 4, MWDPlan(d_w=4))
+    import tempfile
+    with tempfile.TemporaryDirectory() as d:
+        checkpoint.save(d, 4, {"cur": half[0], "prev": half[1]})
+        _, restored = checkpoint.restore(d, {"cur": half[0],
+                                             "prev": half[1]})
+    resumed = run_mwd(spec, (restored["cur"], restored["prev"]), coeffs, 4,
+                      MWDPlan(d_w=4))
+    np.testing.assert_array_equal(np.asarray(straight[0]),
+                                  np.asarray(resumed[0]))
+
+
+def test_dryrun_cell_enumeration():
+    from repro.launch import dryrun
+    cells = list(dryrun.iter_cells("all", "all"))
+    lm_cells = [c for c in cells if not c[0].startswith("girih-")]
+    girih_cells = [c for c in cells if c[0].startswith("girih-")]
+    assert len(lm_cells) == 40
+    assert sum(1 for c in lm_cells if not c[2]) == 34
+    assert len(girih_cells) == 8
+
+
+@pytest.mark.slow
+def test_train_launcher_end_to_end(tmp_path):
+    """Train a reduced model, interrupt, resume from checkpoint."""
+    from repro.launch import train
+    ck = str(tmp_path / "ck")
+    train.main(["--arch", "llama3.2-1b", "--steps", "6", "--batch", "2",
+                "--seq", "32", "--ckpt", ck, "--ckpt-every", "3"])
+    assert checkpoint.all_steps(ck) == [3, 6]
+    # resume continues from 6 without error
+    train.main(["--arch", "llama3.2-1b", "--steps", "8", "--batch", "2",
+                "--seq", "32", "--ckpt", ck, "--ckpt-every", "3"])
+
+
+@pytest.mark.slow
+def test_quickstart_example_runs():
+    import os
+    root = os.path.join(os.path.dirname(__file__), "..")
+    env = dict(os.environ, PYTHONPATH=os.path.join(root, "src"))
+    proc = subprocess.run(
+        [sys.executable, os.path.join(root, "examples", "quickstart.py")],
+        capture_output=True, text=True, timeout=1200, env=env)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "all methods agree" in proc.stdout

@@ -1,0 +1,70 @@
+"""Property tests: the diamond tessellation covers space-time exactly once."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as hst
+
+from repro.core import tiling
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    radius=hst.sampled_from([1, 2, 4]),
+    k=hst.integers(1, 4),
+    t_total=hst.integers(1, 20),
+    ny=hst.integers(4, 70),
+    y_lo=hst.integers(0, 6),
+)
+def test_tessellation_exact_cover(radius, k, t_total, ny, y_lo):
+    d_w = 2 * radius * k
+    y_hi = y_lo + ny
+    sched = tiling.make_diamond_schedule(d_w, radius, t_total, y_lo, y_hi)
+    cover = np.zeros((t_total, ny), dtype=np.int32)
+    for tile in sched.tiles():
+        for (t, a, b) in tile.spans:
+            assert 0 <= t < t_total
+            assert y_lo <= a < b <= y_hi
+            cover[t, a - y_lo:b - y_lo] += 1
+    assert (cover == 1).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(radius=hst.sampled_from([1, 4]), k=hst.integers(1, 3),
+       t_total=hst.integers(2, 16), ny=hst.integers(8, 50))
+def test_dependencies_point_to_previous_row(radius, k, t_total, ny):
+    d_w = 2 * radius * k
+    sched = tiling.make_diamond_schedule(d_w, radius, t_total, 1, 1 + ny)
+    keys = {(t.row, t.col) for t in sched.tiles()}
+    for tile in sched.tiles():
+        for dep in sched.dependencies(tile):
+            assert dep in keys
+            assert dep[0] == tile.row - 1
+
+
+def test_dependency_covers_stencil_reach():
+    """Every read of an expanding update is covered by its row-(r-1) deps."""
+    sched = tiling.make_diamond_schedule(8, 1, 12, 1, 41)
+    by_key = {(t.row, t.col): t for t in sched.tiles()}
+    span_owner = {}
+    for t in sched.tiles():
+        for (tt, a, b) in t.spans:
+            for y in range(a, b):
+                span_owner[(tt, y)] = (t.row, t.col)
+    for tile in sched.tiles():
+        deps = set(sched.dependencies(tile)) | {(tile.row, tile.col)}
+        for (t, a, b) in tile.spans:
+            if t == 0:
+                continue
+            for y in (a - 1, a, b - 1, b):  # reads at edges +-R (R=1)
+                owner = span_owner.get((t - 1, min(max(y, 1), 40)))
+                if owner is None:
+                    continue
+                # the producing tile is this tile, a dep, or an older row
+                assert owner in deps or owner[0] < tile.row
+
+
+def test_wavefront_width_matches_paper():
+    # paper: W_w = D_w + N_F - 2 at R=1; general W_w = D_w - 2R + N_F
+    assert tiling.wavefront_width(8, 1, 1) == 7
+    assert tiling.wavefront_width(16, 4, 2) == 10
+    p = tiling.WavefrontPlan(d_w=8, radius=1, n_f=1, t_block=4)
+    assert p.z_working_set == 1 + 1 * 3
