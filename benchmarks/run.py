@@ -12,6 +12,10 @@ no TPU). Figure mapping:
   fig16_18_groupsize  Figs. 16-18 (device-group size vs traffic/energy)
   fig19_energy        Fig. 19 (energy vs code balance)
   autotune_bench      Fig. 7 (auto-tuner convergence)
+  fused_vs_row        single-launch compiled schedule vs one launch per
+                      diamond row: wall-clock + exact HBM bytes + GLUP/s
+  smoke               CI gate: tiny-grid interpret-mode correctness +
+                      traffic sanity, asserts on regression
   lm_substrate        microbenches of the LM substrate layers
 """
 
@@ -28,6 +32,7 @@ from benchmarks import traffic
 from repro import hw
 from repro.core import autotune, models, mwd, stencils as st
 from repro.core.mwd import MWDPlan
+from repro.kernels import ops
 
 
 def _t(fn, *args, reps=3, **kw):
@@ -136,6 +141,69 @@ def autotune_bench():
              f"score={res.score:.1f};evals={len(res.evaluated)}")
 
 
+def fused_vs_row():
+    """Single-launch fused MWD vs per-row launches: time, HBM bytes, GLUP/s."""
+    t_steps = 4
+    for name, spec in st.SPECS.items():
+        shape = (10, 18, 14) if spec.radius == 1 else (12, 26, 18)
+        d_w, n_f = 4 * spec.radius, 2
+        state, coeffs = st.make_problem(spec, shape, seed=0)
+        lups = float(np.prod(shape)) * t_steps
+        us_f = _t(lambda: jax.block_until_ready(
+            ops.mwd(spec, state, coeffs, t_steps, d_w=d_w, n_f=n_f,
+                    fused=True)), reps=1)
+        us_r = _t(lambda: jax.block_until_ready(
+            ops.mwd(spec, state, coeffs, t_steps, d_w=d_w, n_f=n_f,
+                    fused=False)), reps=1)
+        tf = traffic.mwd_run_traffic(spec, shape, t_steps, d_w, n_f,
+                                     fused=True)
+        tr = traffic.mwd_run_traffic(spec, shape, t_steps, d_w, n_f,
+                                     fused=False)
+        v5e = models.ecm_predict(spec, tf["code_balance"], lups).glups
+        _row(f"fusedrow.{name}.fused", us_f,
+             f"cpu_GLUPs={lups/us_f/1e3:.4f};hbm_MB={tf['bytes']/1e6:.2f};"
+             f"launches={tf['launches']};v5e_model_GLUPs={v5e:.1f}")
+        _row(f"fusedrow.{name}.row", us_r,
+             f"cpu_GLUPs={lups/us_r/1e3:.4f};hbm_MB={tr['bytes']/1e6:.2f};"
+             f"launches={tr['launches']};"
+             f"hbm_saved={1 - tf['bytes']/tr['bytes']:.1%}")
+
+
+def smoke():
+    """CI smoke gate (interpret mode, tiny grids): asserts, then reports.
+
+    1. fused single-launch == run_mwd oracle BITWISE (both time orders);
+    2. modeled fused HBM bytes strictly below the per-row path;
+    3. the auto-tuner returns a feasible fused plan.
+    """
+    for name in ("7pt-const", "25pt-const"):
+        spec = st.SPECS[name]
+        shape = (8, 14, 10) if spec.radius == 1 else (10, 18, 14)
+        d_w, n_f = 2 * spec.radius, 2
+        state, coeffs = st.make_problem(spec, shape, seed=0)
+        t_steps = 3
+        want = mwd.run_mwd(spec, state, coeffs, t_steps, MWDPlan(d_w=d_w))
+        got = ops.mwd(spec, state, coeffs, t_steps, d_w=d_w, n_f=n_f)
+        exact = bool((np.asarray(want[0]) == np.asarray(got[0])).all()
+                     and (np.asarray(want[1]) == np.asarray(got[1])).all())
+        assert exact, f"fused kernel != oracle for {name}"
+        tf = traffic.mwd_run_traffic(spec, shape, t_steps, d_w, n_f,
+                                     fused=True)
+        tr = traffic.mwd_run_traffic(spec, shape, t_steps, d_w, n_f,
+                                     fused=False)
+        assert tf["bytes"] < tr["bytes"], \
+            f"fused traffic not below per-row for {name}"
+        _row(f"smoke.{name}", 0.0,
+             f"fused_eq_oracle_bitwise={exact};"
+             f"fused_MB={tf['bytes']/1e6:.2f};row_MB={tr['bytes']/1e6:.2f};"
+             f"launches={tr['launches']}->1")
+    res = autotune.autotune(st.SPECS["7pt-var"], (128, 128, 128), devices_x=1)
+    assert res.plan.fused, "auto-tuner should pick the fused schedule"
+    _row("smoke.autotune", 0.0,
+         f"plan=dw{res.plan.d_w}.nf{res.plan.n_f}.fused;"
+         f"score={res.score:.1f}")
+
+
 def lm_substrate():
     from repro import configs
     from repro.models import lm
@@ -162,6 +230,8 @@ BENCHES = {
     "fig16_18_groupsize": fig16_18_groupsize,
     "fig19_energy": fig19_energy,
     "autotune_bench": autotune_bench,
+    "fused_vs_row": fused_vs_row,
+    "smoke": smoke,
     "lm_substrate": lm_substrate,
 }
 

@@ -9,8 +9,9 @@ exactly the effects the paper measures.
 
 from __future__ import annotations
 
+from repro.core.models import mwd_tile_bytes
 from repro.core.stencils import StencilSpec
-from repro.core.tiling import make_diamond_schedule
+from repro.core.tiling import compile_schedule, make_diamond_schedule
 
 
 def mwd_pass_traffic(spec: StencilSpec, grid_shape, d_w: int, n_f: int,
@@ -18,26 +19,42 @@ def mwd_pass_traffic(spec: StencilSpec, grid_shape, d_w: int, n_f: int,
     """Bytes DMA'd by stencil_mwd.mwd_run for a full T-step advance, exact."""
     nz, ny, nx = grid_shape
     r = spec.radius
-    t_steps = d_w // r
     h = d_w // (2 * r)
-    pz, px = r, r
-    py = 2 * d_w + r
-    n_j = -(-(pz + nz + d_w) // n_f)
-    nxp = nx + 2 * px
-    wy = d_w + 2 * r
     n_tiles = ny // d_w + 3
-    # per (tile, j): in-DMA = streams * (n_f, wy, nxp); out = 2 * (n_f, d_w, nxp)
-    n_streams_in = 2 + spec.n_coeff_arrays          # both parities + coeffs
-    per_step_in = n_streams_in * n_f * wy * nxp * word
-    out_steps = max(0, n_j - d_w // n_f)
-    per_step_out = 2 * n_f * d_w * nxp * word
     # rows per full diamond pass advance h steps; a T-total run needs
     # ceil(T/h)+1 row passes — report per single row pass here
-    bytes_pass = n_tiles * (n_j * per_step_in + out_steps * per_step_out)
+    bytes_pass = n_tiles * mwd_tile_bytes(spec, d_w, n_f, nz, nx, word)
     lups_pass = nz * ny * nx * h                     # LUPs advanced per pass
     return {"bytes": float(bytes_pass), "lups": float(lups_pass),
             "code_balance": bytes_pass / lups_pass,
             "rows_per_pass": 1, "steps_per_pass": h}
+
+
+def mwd_run_traffic(spec: StencilSpec, grid_shape, n_steps: int, d_w: int,
+                    n_f: int, word: int = 4, fused: bool = True) -> dict:
+    """Exact DMA bytes of stencil_mwd.mwd_run for a full n_steps advance.
+
+    Counted straight off the compiled schedule the kernel itself consumes:
+
+      fused=True   one launch for the whole schedule; inactive edge tiles
+                   are skipped and the parity grids stay aliased in HBM —
+                   only active tiles' window streams + strip emissions move.
+      fused=False  one launch per diamond row; EVERY tile of every row
+                   streams its window and re-emits its strip (the legacy
+                   mode), so the inactive edge tiles' round-trips are the
+                   inter-row traffic the fused schedule saves.
+    """
+    nz, ny, nx = grid_shape
+    r = spec.radius
+    comp = compile_schedule(
+        make_diamond_schedule(d_w, r, n_steps, r, ny - r))
+    n_tiles = comp.n_active if fused else comp.n_rows * comp.n_tiles
+    bytes_total = n_tiles * mwd_tile_bytes(spec, d_w, n_f, nz, nx, word)
+    lups = nz * ny * nx * n_steps
+    return {"bytes": float(bytes_total), "lups": float(lups),
+            "code_balance": bytes_total / lups,
+            "launches": 1 if fused else comp.n_rows,
+            "tiles": int(n_tiles), "rows": comp.n_rows}
 
 
 def ghostzone_pass_traffic(spec: StencilSpec, grid_shape, t_block: int,

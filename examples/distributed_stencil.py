@@ -14,6 +14,7 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 import jax                                                   # noqa: E402
 import jax.numpy as jnp                                      # noqa: E402
 
+from repro import compat                                     # noqa: E402
 from repro.core import stencils as st                        # noqa: E402
 from repro.distributed import checkpoint, stepper            # noqa: E402
 
@@ -23,17 +24,15 @@ T1, T2 = 4, 4
 state, coeffs = st.make_problem(spec, shape, seed=11)
 
 # phase 1: healthy 2x2x2 mesh (2 pods)
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+mesh = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
 out = stepper.run_distributed(spec, mesh, state, coeffs, T1, t_block=2)
 ckpt_dir = "/tmp/dist_stencil_ckpt"
 checkpoint.save(ckpt_dir, T1, {"cur": out[0], "prev": out[1]})
 print(f"phase 1: {T1} steps on {mesh.devices.size} devices, checkpointed")
 
 # phase 2: a pod dies -> rebuild on 4 devices, reshard, continue
-small = jax.make_mesh((2, 2), ("data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,) * 2,
-                      devices=jax.devices()[:4])
+small = compat.make_mesh((2, 2), ("data", "model"),
+                         devices=jax.devices()[:4])
 gs = stepper.GridSharding(small)
 _, restored = checkpoint.restore(
     ckpt_dir, {"cur": out[0], "prev": out[1]},

@@ -1,0 +1,60 @@
+"""JAX version-compatibility shims.
+
+The repo supports the jax range declared in pyproject.toml; a handful of
+sharding APIs moved or were renamed across that range. Everything
+version-sensitive goes through here so the rest of the codebase (and CI,
+which installs the newest allowed jax) stays clean.
+"""
+
+from __future__ import annotations
+
+import jax
+
+try:                                    # jax >= 0.5 exports it at top level
+    shard_map = jax.shard_map
+except AttributeError:                  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None):
+    """jax.make_mesh with explicit Auto axis_types where supported."""
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if hasattr(jax.sharding, "AxisType"):
+        kwargs["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axis_names)
+    return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+
+
+def get_abstract_mesh():
+    """Current mesh context, or None — callers treat None as 'no mesh'."""
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is not None:
+        return fn()
+    try:                                # jax 0.4.x: thread-local physical mesh
+        from jax.interpreters import pxla
+        mesh = pxla.thread_resources.env.physical_mesh
+        return None if mesh.empty else mesh
+    except Exception:
+        return None
+
+
+def set_mesh(mesh):
+    """Context manager activating `mesh` for sharding-context lookups.
+
+    jax >= 0.7 spells it jax.set_mesh, 0.5-0.6 jax.sharding.use_mesh; on
+    0.4.x the Mesh object is itself the context manager (it sets the
+    thread-local physical mesh that get_abstract_mesh()'s fallback reads).
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    return mesh
+
+
+def axis_size(axis_name) -> int:
+    """jax.lax.axis_size where available (jax >= 0.5); psum(1) fallback."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)

@@ -50,6 +50,15 @@ def model_score(spec: StencilSpec, grid_shape, word_bytes: int = 4,
         if plan.tg_x > 1:
             halo_bytes = 2 * spec.radius * nz * plan.d_w * word_bytes
             t_sync = halo_bytes / chip.ici_bw_per_link + 2e-6  # +latency
+        if not plan.fused:
+            # per-row launch mode: each diamond row re-streams the inactive
+            # edge tiles and pays one dispatch; amortized over the H = D_w/2R
+            # steps a row pass advances (fused pays neither inter-row cost)
+            h = plan.d_w // (2 * spec.radius)
+            extra_b = models.mwd_row_overhead_bytes(
+                spec, plan.d_w, plan.n_f, (nz, ny, nx // plan.tg_x),
+                word_bytes)
+            t_sync += (extra_b / chip.hbm_bw + models.T_DISPATCH_S) / h
         return pred.lups / (pred.t_total + t_sync) / 1e9
 
     return score
@@ -64,6 +73,9 @@ def _neighbors(plan: MWDPlan, radius: int) -> list[MWDPlan]:
     for n_f in (plan.n_f - 1, plan.n_f + 1, plan.n_f * 2):
         if n_f >= 1 and n_f != plan.n_f:
             cands.append(dataclasses.replace(plan, n_f=n_f))
+    # execution mode is part of the search space: fused single-launch
+    # schedule vs one launch per diamond row
+    cands.append(dataclasses.replace(plan, fused=not plan.fused))
     return cands
 
 

@@ -69,6 +69,50 @@ def spatial_code_balance(spec: StencilSpec, word_bytes: int = 8) -> float:
     return spec.spatial_code_balance(word_bytes)
 
 
+# Host -> accelerator dispatch latency per pallas_call. The per-row MWD mode
+# pays it once per diamond row; the fused single-launch schedule pays it once
+# per n_steps advance. Priced into the auto-tuner like the sync term.
+T_DISPATCH_S = 5e-6
+
+
+def mwd_tile_bytes(spec: StencilSpec, d_w: int, n_f: int, nz: int, nx: int,
+                   word_bytes: int = 4) -> float:
+    """Exact DMA bytes ONE tile moves over its full wavefront sweep.
+
+    Window streams in (both parity buffers + coefficient streams, one
+    (N_F, D_w+2R, nx+2R) slab per wavefront step) plus strip emissions out
+    (both parities, (N_F, D_w) per step once the pipeline fills). This is
+    the single source of truth for the kernel's per-tile traffic; the
+    benchmarks.traffic counters and the auto-tuner overhead term below both
+    multiply it by their tile counts.
+    """
+    r = spec.radius
+    n_j = -(-(r + nz + d_w) // n_f)          # wavefront steps along z
+    nxp = nx + 2 * r
+    wy = d_w + 2 * r
+    n_streams_in = 2 + spec.n_coeff_arrays   # both parities + coeff streams
+    per_step_in = n_streams_in * n_f * wy * nxp * word_bytes
+    out_steps = max(0, n_j - d_w // n_f)
+    per_step_out = 2 * n_f * d_w * nxp * word_bytes
+    return float(n_j * per_step_in + out_steps * per_step_out)
+
+
+def mwd_row_overhead_bytes(spec: StencilSpec, d_w: int, n_f: int,
+                           grid_shape, word_bytes: int = 4) -> float:
+    """Extra HBM bytes ONE per-row launch moves vs the fused schedule.
+
+    The per-row kernel streams and re-emits every tile of the row, including
+    the (at least two) inactive edge tiles that own no diamond spans; the
+    fused kernel's active-tile gating skips them, and its aliased parity
+    buffers never materialize fresh padded grids between rows. Exact per-run
+    counts live in benchmarks.traffic.mwd_run_traffic; this closed form is
+    the Eq. 5-style term the auto-tuner scores with.
+    """
+    nz, ny, nx = grid_shape
+    n_inactive = 2                           # edge columns -1 and ny//D_w + 1
+    return n_inactive * mwd_tile_bytes(spec, d_w, n_f, nz, nx, word_bytes)
+
+
 def ghostzone_code_balance(spec: StencilSpec, t_b: int, block_y: int,
                            block_z: int, word_bytes: int = 8) -> float:
     """Code balance of the ghost-zone (overlapped) fused kernel.

@@ -43,6 +43,7 @@ class MWDPlan:
     t_block: int = 0      # fused time steps for the ghost-zone kernel (0=off)
     tg_x: int = 1         # devices sharing a tile along x
     block_x: int = 0      # 0 = never tile x (paper's leading-dimension rule)
+    fused: bool = True    # single-launch compiled schedule vs one launch/row
 
     def wavefront(self, radius: int) -> tiling.WavefrontPlan:
         t_b = self.d_w // (2 * radius)  # diamond half-height
@@ -92,6 +93,39 @@ def run_mwd(spec: st.StencilSpec, state, coeffs, n_steps: int,
         for tile in row:
             for (t, y0, y1) in tile.spans:
                 p = t % 2
+                bufs[1 - p] = _span_update(spec, bufs[0], bufs[1], coeffs,
+                                           y0, y1, p)
+    p = n_steps % 2
+    return bufs[p], bufs[1 - p]
+
+
+def run_compiled(spec: st.StencilSpec, state, coeffs, n_steps: int,
+                 plan: MWDPlan):
+    """Oracle over the *compiled* schedule tables: identical semantics to
+    run_mwd, but driven by compile_schedule()'s dense arrays in their
+    row-major launch order — this validates the flattening (offsets, y-ranges,
+    parity, active mask) independently of the Pallas kernel that consumes it.
+    """
+    cur, prev = state
+    ny = cur.shape[1]
+    r = spec.radius
+    for ax in range(3):
+        lo = tuple(slice(None) if a != ax else slice(0, r) for a in range(3))
+        hi = tuple(slice(None) if a != ax else slice(-r, None) for a in range(3))
+        prev = prev.at[lo].set(cur[lo]).at[hi].set(cur[hi])
+    comp = tiling.compile_schedule(
+        tiling.make_diamond_schedule(plan.d_w, r, n_steps, r, ny - r))
+    bufs = [cur, prev]
+    for i in range(comp.n_rows):
+        p0 = int(comp.parity[i])
+        for k in range(comp.n_tiles):
+            if not comp.active[i, k]:
+                continue
+            for tau in range(comp.t_steps):
+                y0, y1 = int(comp.y0[i, k, tau]), int(comp.y1[i, k, tau])
+                if y1 <= y0:
+                    continue
+                p = (p0 + tau) % 2
                 bufs[1 - p] = _span_update(spec, bufs[0], bufs[1], coeffs,
                                            y0, y1, p)
     p = n_steps % 2

@@ -25,6 +25,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Iterator
 
+import numpy as np
+
 
 @dataclasses.dataclass(frozen=True)
 class DiamondTile:
@@ -134,6 +136,120 @@ def make_diamond_schedule(d_w: int, radius: int, t_total: int,
             rows.append(tuple(row_tiles))
     return DiamondSchedule(d_w=d_w, radius=radius, t_total=t_total,
                            y_lo=y_lo, y_hi=y_hi, rows=tuple(rows))
+
+
+# ---------------------------------------------------------------------------
+# Schedule compiler: DiamondSchedule -> dense static launch tables
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CompiledSchedule:
+    """A DiamondSchedule flattened into dense arrays for one kernel launch.
+
+    The single-launch MWD megakernel (kernels/stencil_mwd.py) walks a static
+    grid (row, tile, wavefront step); everything data-dependent about the
+    tessellation is precompiled here into scalar-prefetch tables indexed by
+    (row position, tile position):
+
+      t_base[i]        first global time step of row pass i (may be negative:
+                       row 0's expanding half lies before t=0 and is clipped)
+      parity[i]        t_base[i] mod 2 — which buffer holds the time level
+                       t_base at the start of the pass (two-buffer scheme)
+      w0[i, k]         unclipped window start along y (domain coordinates,
+                       may be negative; the kernel adds its pad offset):
+                       diamond center - D_w/2 - R
+      y0/y1[i, k, tau] half-open update range at in-tile step tau; 0/0 where
+                       the (clipped) diamond has no span at that step
+      active[i, k]     1 iff the tile owns at least one span — inactive edge
+                       tiles are skipped by the fused kernel (saved streams)
+      order            row-major (row, col) launch order over active tiles,
+                       validated against DiamondSchedule.dependencies()
+
+    Rows are in dependency order; tiles within a row are independent (their
+    mutual reads touch only the parity level a same-row neighbor never
+    overwrites — see DESIGN.md), so row-major order is a legal linearization
+    of the tile DAG, which compile_schedule() asserts.
+    """
+
+    d_w: int
+    radius: int
+    t_total: int
+    y_lo: int
+    y_hi: int
+    n_rows: int
+    n_tiles: int
+    cols: tuple[int, ...]         # tile position k -> diamond column id
+    t_base: np.ndarray            # (n_rows,) int32
+    parity: np.ndarray            # (n_rows,) int32
+    w0: np.ndarray                # (n_rows, n_tiles) int32
+    y0: np.ndarray                # (n_rows, n_tiles, t_steps) int32
+    y1: np.ndarray                # (n_rows, n_tiles, t_steps) int32
+    active: np.ndarray            # (n_rows, n_tiles) int32
+    order: tuple[tuple[int, int], ...]
+
+    @property
+    def t_steps(self) -> int:
+        """In-tile updates per pass: T = D_w / R = 2 * half_height."""
+        return self.d_w // self.radius
+
+    @property
+    def n_active(self) -> int:
+        return int(self.active.sum())
+
+
+def compile_schedule(sched: DiamondSchedule) -> CompiledSchedule:
+    """Flatten `sched` into dense launch tables (see CompiledSchedule).
+
+    Raises ValueError if the row-major launch order would violate the tile
+    dependency DAG (cannot happen for schedules built by
+    make_diamond_schedule; the check guards future schedule generators).
+    """
+    d_w, r = sched.d_w, sched.radius
+    h = sched.half_height
+    t_steps = 2 * h
+    ny = sched.y_hi - sched.y_lo
+    cols = tuple(range(-1, ny // d_w + 2))
+    rows = sched.rows_by_index()
+    row_indices = sorted(rows)
+    n_rows, n_tiles = len(row_indices), len(cols)
+
+    t_base = np.zeros(n_rows, np.int32)
+    w0 = np.zeros((n_rows, n_tiles), np.int32)
+    y0 = np.zeros((n_rows, n_tiles, t_steps), np.int32)
+    y1 = np.zeros((n_rows, n_tiles, t_steps), np.int32)
+    active = np.zeros((n_rows, n_tiles), np.int32)
+    order: list[tuple[int, int]] = []
+    done: set[tuple[int, int]] = set()
+
+    for i, row_idx in enumerate(row_indices):
+        t_base[i] = (row_idx - 1) * h
+        by_col = {t.col: t for t in rows[row_idx]}
+        row_start = len(order)
+        for k, col in enumerate(cols):
+            center = col * d_w + sched.y_lo + (d_w // 2 if row_idx % 2 else 0)
+            w0[i, k] = center - d_w // 2 - r
+            tile = by_col.get(col)
+            if tile is None:
+                continue
+            for (t, a, b) in tile.spans:
+                tau = t - t_base[i]
+                if 0 <= tau < t_steps:
+                    y0[i, k, tau] = a
+                    y1[i, k, tau] = b
+            active[i, k] = 1
+            for dep in sched.dependencies(tile):
+                if dep not in done:
+                    raise ValueError(
+                        f"row-major order violates dependency {dep} -> "
+                        f"({row_idx}, {col})")
+            order.append((row_idx, col))
+        done.update(order[row_start:])
+
+    return CompiledSchedule(
+        d_w=d_w, radius=r, t_total=sched.t_total, y_lo=sched.y_lo,
+        y_hi=sched.y_hi, n_rows=n_rows, n_tiles=n_tiles, cols=cols,
+        t_base=t_base, parity=t_base % 2, w0=w0, y0=y0, y1=y1,
+        active=active, order=tuple(order))
 
 
 # ---------------------------------------------------------------------------

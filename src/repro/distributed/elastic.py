@@ -19,6 +19,7 @@ from typing import Callable
 
 import jax
 
+from repro import compat
 from repro.launch import mesh as mesh_lib
 
 
@@ -38,8 +39,7 @@ def plan_mesh(n_devices: int) -> tuple[tuple[int, ...], tuple[str, ...]]:
 def build_mesh(n_devices: int | None = None) -> jax.sharding.Mesh:
     n = n_devices if n_devices is not None else len(jax.devices())
     shape, axes = plan_mesh(n)
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 @dataclasses.dataclass

@@ -16,6 +16,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.compat import axis_size as _axis_size
+
 
 def _edge_clamp(block, depth: int, axis: int, lo: bool):
     """Edge-replicated stand-in halo at the global domain boundary."""
@@ -39,7 +41,7 @@ def exchange_axis(block, axis_name: str, axis: int, depth: int):
             f"halo depth {depth} exceeds local block extent "
             f"{block.shape[axis]} on axis {axis}: lower t_block or use a "
             f"coarser decomposition (single-hop exchange only)")
-    n = jax.lax.axis_size(axis_name)
+    n = _axis_size(axis_name)
     i = jax.lax.axis_index(axis_name)
     ndim = block.ndim
     lo_idx = [slice(None)] * ndim

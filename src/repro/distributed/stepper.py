@@ -23,8 +23,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map as _shard_map
 from repro.core import stencils as st
+from repro.core.mwd import MWDPlan
 from repro.distributed import halo
+from repro.kernels import stencil_mwd
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,6 +109,69 @@ def _local_super_step(spec: st.StencilSpec, t_block: int, gs: GridSharding,
     return a[crop], b[crop]
 
 
+def _local_super_step_mwd(spec: st.StencilSpec, plan: MWDPlan, t_block: int,
+                          gs: GridSharding, grid_shape, hoisted: bool,
+                          plan_scalars, cur, prev, coeffs):
+    """MWD-kernel local super-step: ONE fused pallas_call per halo exchange.
+
+    Same deep-halo contract as _local_super_step, but the t_block local steps
+    run as a single compiled-schedule MWD launch instead of t_block jnp
+    sweeps. The global Dirichlet frame is enforced inside the kernel via
+    per-shard dynamic interior bounds (traced from axis_index); the diamond
+    tessellation spans the full extended block so halo cells advance the
+    intermediate levels the interior needs.
+    """
+    r = spec.radius
+    g = r * t_block
+    nz_g, ny_g, nx_g = grid_shape
+    zax, yax = gs.z_axes, gs.y_axis
+
+    ext = lambda a: halo.exchange_2d(a, g, axis_z=zax, axis_y=yax)
+    cur_e = ext(cur)
+    prev_e = ext(prev) if spec.time_order == 2 else cur_e
+    padx = lambda a: jnp.pad(a, [(0, 0)] * (a.ndim - 1) + [(g, g)],
+                             mode="edge")
+    cur_e, prev_e = padx(cur_e), padx(prev_e)
+    coeffs_e = coeffs if hoisted else _extend_coeffs(spec, t_block, gs, coeffs)
+    # the kernel bakes scalar coefficients in as compile-time constants;
+    # traced scalars cannot cross into it, so swap in the static values
+    if spec.time_order == 2:
+        coeffs_e = (coeffs_e[0], plan_scalars)
+    elif not spec.n_coeff_arrays:
+        coeffs_e = plan_scalars
+
+    nz_l, ny_l, nx_l = cur.shape
+    nz_e, ny_e, nx_e = cur_e.shape
+    z0 = jax.lax.axis_index(zax) * nz_l - g   # global coord of local cell 0
+    y0 = jax.lax.axis_index(yax) * ny_l - g
+    # global Dirichlet frame clipped into the extended block: cells outside
+    # [lo, hi) are held by the kernel's dynamic write mask
+    lo_z = jnp.maximum(r - z0, 0)
+    hi_z = jnp.minimum(nz_g - r - z0, nz_e)
+    lo_y = jnp.maximum(r - y0, 0)
+    hi_y = jnp.minimum(ny_g - r - y0, ny_e)
+    interior = jnp.stack([lo_z, hi_z, lo_y, hi_y,
+                          jnp.asarray(g + r), jnp.asarray(g + nx_g - r)]
+                         ).astype(jnp.int32)
+
+    if spec.time_order == 2:
+        # frame cells must read back as cur at EVERY time parity (the jnp
+        # path re-imposes them each step); sync the odd-parity buffer too
+        sh = cur_e.shape
+        gz = jax.lax.broadcasted_iota(jnp.int32, sh, 0) + z0
+        gy = jax.lax.broadcasted_iota(jnp.int32, sh, 1) + y0
+        gx = jax.lax.broadcasted_iota(jnp.int32, sh, 2) - g
+        frame = ((gz < r) | (gz >= nz_g - r) | (gy < r) | (gy >= ny_g - r)
+                 | (gx < r) | (gx >= nx_g - r))
+        prev_e = jnp.where(frame, cur_e, prev_e)
+
+    a, b = stencil_mwd.mwd_run(spec, (cur_e, prev_e), coeffs_e, t_block,
+                               d_w=plan.d_w, n_f=plan.n_f, fused=plan.fused,
+                               interior=interior, y_domain=(0, ny_e))
+    crop = (slice(g, g + nz_l), slice(g, g + ny_l), slice(g, g + nx_l))
+    return a[crop], b[crop]
+
+
 def _coeff_specs(spec: st.StencilSpec, gs: GridSharding) -> P | tuple:
     if spec.time_order == 2:
         return (gs.spec(), P())
@@ -115,17 +181,33 @@ def _coeff_specs(spec: st.StencilSpec, gs: GridSharding) -> P | tuple:
 
 
 def make_super_step(spec: st.StencilSpec, mesh: jax.sharding.Mesh,
-                    grid_shape, t_block: int, *, hoisted: bool = False):
+                    grid_shape, t_block: int, *, hoisted: bool = False,
+                    plan: MWDPlan | None = None, plan_scalars=None):
     """Build the jitted distributed super-step: (cur, prev, coeffs) -> state.
 
     hoisted=True expects coefficients pre-extended by make_coeff_extender
-    (halo exchange once at setup instead of every super-step)."""
+    (halo exchange once at setup instead of every super-step).
+
+    plan: when given, each device advances its t_block local steps with ONE
+    fused MWD kernel launch (the compiled diamond schedule) instead of
+    t_block jnp sweeps — one launch per halo exchange. plan_scalars carries
+    the stencil's scalar coefficients as static Python floats (the kernel
+    inlines them); required for scalar-coefficient stencils."""
     gs = GridSharding(mesh)
-    fn = jax.shard_map(
-        partial(_local_super_step, spec, t_block, gs, grid_shape, hoisted),
+    kwargs = {}
+    if plan is not None:
+        local = partial(_local_super_step_mwd, spec, plan, t_block, gs,
+                        grid_shape, hoisted, plan_scalars)
+        kwargs["check_rep"] = False     # no replication rule for pallas_call
+    else:
+        local = partial(_local_super_step, spec, t_block, gs, grid_shape,
+                        hoisted)
+    fn = _shard_map(
+        local,
         mesh=mesh,
         in_specs=(gs.spec(), gs.spec(), _coeff_specs(spec, gs)),
         out_specs=(gs.spec(), gs.spec()),
+        **kwargs,
     )
     return jax.jit(fn)
 
@@ -134,7 +216,7 @@ def make_coeff_extender(spec: st.StencilSpec, mesh: jax.sharding.Mesh,
                         t_block: int):
     """One-time coefficient halo exchange; output feeds hoisted super-steps."""
     gs = GridSharding(mesh)
-    fn = jax.shard_map(
+    fn = _shard_map(
         partial(_extend_coeffs, spec, t_block, gs),
         mesh=mesh,
         in_specs=(_coeff_specs(spec, gs),),
@@ -163,13 +245,23 @@ def extended_coeff_sds(spec: st.StencilSpec, mesh, grid_shape, t_block: int,
 
 
 def run_distributed(spec: st.StencilSpec, mesh, state, coeffs, n_steps: int,
-                    t_block: int = 2, *, hoisted: bool = False):
-    """Place the problem on the mesh and advance n_steps (super-stepped)."""
+                    t_block: int = 2, *, hoisted: bool = False,
+                    plan: MWDPlan | None = None):
+    """Place the problem on the mesh and advance n_steps (super-stepped).
+
+    plan: run each super-step as one fused MWD kernel launch per device
+    (see make_super_step) instead of t_block jnp sweeps."""
     gs = GridSharding(mesh)
     cur, prev = state
     prev = (jax.device_put(prev, gs.sharding()) if spec.time_order == 2
             else jax.device_put(cur, gs.sharding()))
     cur = jax.device_put(cur, gs.sharding())
+    plan_scalars = None
+    if plan is not None:    # hoist scalar coefficients while still concrete
+        if spec.time_order == 2:
+            plan_scalars = tuple(float(x) for x in coeffs[1])
+        elif not spec.n_coeff_arrays:
+            plan_scalars = tuple(float(x) for x in coeffs)
     if spec.time_order == 2:
         c_arr, c_vec = coeffs
         coeffs = (jax.device_put(c_arr, gs.sharding()), jnp.asarray(c_vec))
@@ -179,12 +271,14 @@ def run_distributed(spec: st.StencilSpec, mesh, state, coeffs, n_steps: int,
         if n_steps % t_block:
             raise ValueError("hoisted mode needs t_block | n_steps")
         coeffs = make_coeff_extender(spec, mesh, t_block)(coeffs)
-    step = make_super_step(spec, mesh, cur.shape, t_block, hoisted=hoisted)
+    step = make_super_step(spec, mesh, cur.shape, t_block, hoisted=hoisted,
+                           plan=plan, plan_scalars=plan_scalars)
     done = 0
     while done < n_steps:
         tb = min(t_block, n_steps - done)
         if tb != t_block:
-            step = make_super_step(spec, mesh, cur.shape, tb)
+            step = make_super_step(spec, mesh, cur.shape, tb, plan=plan,
+                                   plan_scalars=plan_scalars)
         cur, prev = step(cur, prev, coeffs)
         done += tb
     return cur, prev

@@ -66,17 +66,23 @@ def ghostzone(spec: StencilSpec, state, coeffs, n_steps: int,
     return _ghostzone(spec, state, arrays, scalars, n_steps, t_block, bz, by)
 
 
-@partial(jax.jit, static_argnames=("spec", "scalars", "n_steps", "d_w", "n_f"))
-def _mwd(spec, state, arrays, scalars, n_steps, d_w, n_f):
+@partial(jax.jit, static_argnames=("spec", "scalars", "n_steps", "d_w", "n_f",
+                                   "fused"))
+def _mwd(spec, state, arrays, scalars, n_steps, d_w, n_f, fused):
     coeffs = _join_coeffs(spec, arrays, scalars)
-    return stencil_mwd.mwd_run(spec, state, coeffs, n_steps, d_w=d_w, n_f=n_f)
+    return stencil_mwd.mwd_run(spec, state, coeffs, n_steps, d_w=d_w, n_f=n_f,
+                               fused=fused)
 
 
 def mwd(spec: StencilSpec, state, coeffs, n_steps: int,
-        d_w: int = 8, n_f: int = 2):
-    """Paper-faithful multi-threaded wavefront diamond blocking."""
+        d_w: int = 8, n_f: int = 2, fused: bool = True):
+    """Paper-faithful multi-threaded wavefront diamond blocking.
+
+    fused=True runs the whole compiled schedule in a single pallas_call with
+    the parity grids resident in HBM; fused=False launches one pass per
+    diamond row (the legacy mode the auto-tuner compares against)."""
     arrays, scalars = _split_coeffs(spec, coeffs)
-    return _mwd(spec, state, arrays, scalars, n_steps, d_w, n_f)
+    return _mwd(spec, state, arrays, scalars, n_steps, d_w, n_f, fused)
 
 
 @partial(jax.jit, static_argnames=("spec", "n_steps"))

@@ -1,24 +1,36 @@
 """MWD kernel: multi-threaded wavefront diamond blocking, TPU-native.
 
-The paper's core technique (Sec. 4) as one Pallas kernel per diamond row:
+The paper's core technique (Sec. 4) as ONE Pallas launch for the whole
+space-time schedule (the per-row launch mode is kept for comparison):
 
-  grid = (tile k, wavefront step j)   # sequential on TPU: j streams z
-  * persistent VMEM scratch holds the live z-window of BOTH time-parity
-    buffers (+ coefficient streams) for one extruded diamond tile;
-  * every step j shifts the window down N_F z-rows ("pipelined" wavefront,
-    Fig. 6c — the data marches through the buffer) and DMAs the next slab of
-    every stream HBM->VMEM;
+  grid = (diamond row, tile k, wavefront step j)   # sequential on TPU
+  * the diamond tessellation is precompiled by core.tiling.compile_schedule
+    into dense scalar-prefetch tables: per-(row, tile) window offsets,
+    per-tau y-ranges, per-row buffer parity, and an active mask;
+  * the two time-parity grids live in HBM for the whole launch — the kernel
+    reads AND writes them through its (input-aliased) output refs, so no
+    padded grid is ever materialized between diamond rows;
+  * persistent VMEM scratch holds the live z-window of both parity buffers
+    (+ coefficient streams) for one extruded diamond tile; every step j
+    shifts the window down N_F z-rows ("pipelined" wavefront, Fig. 6c) and
+    DMAs the next slab of every stream HBM->VMEM;
   * T = D_w/R in-tile time-step updates run at static z-offsets, each masked
     to the diamond's y-range at that local time (diamonds via masking:
     rectangular VMEM blocks, non-rectangular iteration space — see DESIGN.md);
   * one completed slab per parity DMAs back to HBM per step.
 
+In-place safety: tiles of one row touch a same-row neighbor's cells only in
+the R-wide interface margin, and only ever read the parity level that the
+neighbor's single update of those cells does not overwrite (DESIGN.md,
+"why row-major is a legal order"), so the row-major single launch is exact.
+
 Intra-tile parallelization: x is the full-width lane dimension (never tiled,
 paper's leading-dimension rule); y/z vectorize across sublanes. HBM traffic
 per pass is exactly the Eq. 5 code balance: each stream crosses HBM once per
-D_w/(2R) time steps.
+D_w/(2R) time steps; the fused launch additionally skips the inactive edge
+tiles that the per-row mode streams (benchmarks/traffic.py counts both).
 
-Geometry (see derivation in comments): update tau processes padded z-rows
+Geometry (see DESIGN.md): update tau processes padded z-rows
 [N_F*j - (tau+1)R, N_F*(j+1) - (tau+1)R), i.e. buffer rows
 [R*(T-tau), R*(T-tau)+N_F); final-level rows leave through buffer rows
 [R, R+N_F) once j >= D_w/N_F.
@@ -30,7 +42,6 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -48,115 +59,141 @@ def sync_dirichlet_frame(cur, prev, r: int):
     return prev
 
 
-def _row_kernel(spec: st.StencilSpec, d_w: int, n_f: int, p0: int,
-                dims, scalars, n_in: int, *refs):
-    """One diamond-row pass. refs = (w0, y0s, y1s, *in_hbm, out_e, out_o,
-    buf_e, buf_o, [coeff_buf], sem, osem)."""
-    w0_ref, y0_ref, y1_ref = refs[:3]
-    inputs = refs[3:3 + n_in]
-    out_e, out_o = refs[3 + n_in:5 + n_in]
+def _mwd_kernel(spec: st.StencilSpec, d_w: int, n_f: int, scalars,
+                n_in: int, fused: bool, *refs):
+    """One (row, tile, j) grid step of the MWD schedule.
+
+    refs = (bounds, p0s, w0, y0s, y1s, active,      # scalar prefetch
+            buf_e_in, buf_o_in, [coeff_in],         # HBM inputs
+            buf_e, buf_o,                           # HBM outputs (aliased
+                                                    #  to the inputs if fused)
+            win_e, win_o, [coeff_win], sem, osem)   # VMEM scratch + DMA sems
+
+    fused=True streams from / emits to the aliased output refs, keeping both
+    parity grids resident across rows; fused=False reproduces the legacy
+    per-row pass (separate in/out grids, inactive edge tiles not skipped).
+    """
+    bounds_ref, p0_ref, w0_ref, y0_ref, y1_ref, act_ref = refs[:6]
+    inputs = refs[6:6 + n_in]
+    out_e, out_o = refs[6 + n_in:8 + n_in]
     sem, osem = refs[-2], refs[-1]
-    bufs = list(refs[5 + n_in:-2])
+    bufs = list(refs[8 + n_in:-2])
 
     r = spec.radius
     t_steps = d_w // r                  # T = 2H updates per tile
     z_ws = n_f + r * t_steps + r        # live window thickness
-    nz, ny, nx, pz, py, px = dims
-    k, j = pl.program_id(0), pl.program_id(1)
-    w0 = w0_ref[k]
+    row, k, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    w0 = w0_ref[row, k]
+    # fused: the parity grids are read back through the output refs so every
+    # row sees the previous row's in-place writes within the single launch
+    srcs = ([out_e, out_o] + list(inputs[2:])) if fused else list(inputs)
 
-    @pl.when(j == 0)
-    def _init():
+    def tile_step():
+        @pl.when(j == 0)
+        def _init():
+            for b in bufs:
+                b[...] = jnp.zeros_like(b)
+
+        # --- shift the wavefront window down by N_F, stream next slabs in --
         for b in bufs:
-            b[...] = jnp.zeros_like(b)
-
-    # --- shift the wavefront window down by N_F, stream next slabs in ------
-    for b in bufs:
-        if len(b.shape) == 3:
-            b[0:z_ws - n_f] = b[n_f:z_ws]
-        else:
-            b[:, 0:z_ws - n_f] = b[:, n_f:z_ws]
-    wy = bufs[0].shape[-2]
-    for src, dst in zip(inputs, bufs):
-        if len(src.shape) == 3:
-            idx = (pl.ds(j * n_f, n_f), pl.ds(w0, wy))
-            didx = (pl.ds(z_ws - n_f, n_f),)
-        else:
-            idx = (slice(None), pl.ds(j * n_f, n_f), pl.ds(w0, wy))
-            didx = (slice(None), pl.ds(z_ws - n_f, n_f))
-        cp = pltpu.make_async_copy(src.at[idx], dst.at[didx], sem)
-        cp.start()
-        cp.wait()
-
-    coeff_buf = bufs[2] if len(bufs) > 2 else None
-    nxp = bufs[0].shape[-1]
-    shape = (n_f, wy, nxp)
-    y_io = jax.lax.broadcasted_iota(jnp.int32, shape, 1) + w0
-    x_io = jax.lax.broadcasted_iota(jnp.int32, shape, 2)
-    z_loc = jax.lax.broadcasted_iota(jnp.int32, shape, 0)
-    x_mask = (x_io >= px + r) & (x_io < px + nx - r)
-
-    # --- T in-tile updates at static buffer offsets ------------------------
-    for tau in range(t_steps):
-        zb = r * (t_steps - tau)        # buffer row of the N_F target rows
-        p = (p0 + tau) % 2
-        src_b, dst_b = bufs[p], bufs[1 - p]
-        ws = src_b[zb - r:zb + n_f + r]
-        pws = dst_b[zb - r:zb + n_f + r]
-        if spec.time_order == 2:
-            cf = (coeff_buf[zb - r:zb + n_f + r], scalars)
-        elif spec.n_coeff_arrays:
-            cf = coeff_buf[:, zb - r:zb + n_f + r]
-        else:
-            cf = scalars
-        new = st.sweep_fn(spec)(ws, pws, cf)[r:r + n_f]
-
-        y0 = y0_ref[k, tau]
-        y1 = y1_ref[k, tau]
-        z_io = z_loc + (j * n_f - (tau + 1) * r)     # padded z coordinate
-        mask = ((y_io >= y0) & (y_io < y1)
-                & (z_io >= pz + r) & (z_io < pz + nz - r) & x_mask)
-        dst_b[zb:zb + n_f] = jnp.where(mask, new, dst_b[zb:zb + n_f])
-
-    # --- emit the completed slab (both parities) ---------------------------
-    @pl.when(j >= d_w // n_f)
-    def _out():
-        zs = j * n_f - d_w
-        for out, b in ((out_e, bufs[0]), (out_o, bufs[1])):
-            cp = pltpu.make_async_copy(
-                b.at[pl.ds(r, n_f), pl.ds(r, d_w)],
-                out.at[pl.ds(zs, n_f), pl.ds(w0 + r, d_w)], osem)
+            if len(b.shape) == 3:
+                b[0:z_ws - n_f] = b[n_f:z_ws]
+            else:
+                b[:, 0:z_ws - n_f] = b[:, n_f:z_ws]
+        wy = bufs[0].shape[-2]
+        for src, dst in zip(srcs, bufs):
+            if len(src.shape) == 3:
+                idx = (pl.ds(j * n_f, n_f), pl.ds(w0, wy))
+                didx = (pl.ds(z_ws - n_f, n_f),)
+            else:
+                idx = (slice(None), pl.ds(j * n_f, n_f), pl.ds(w0, wy))
+                didx = (slice(None), pl.ds(z_ws - n_f, n_f))
+            cp = pltpu.make_async_copy(src.at[idx], dst.at[didx], sem)
             cp.start()
             cp.wait()
 
+        coeff_buf = bufs[2] if len(bufs) > 2 else None
+        nxp = bufs[0].shape[-1]
+        shape = (n_f, wy, nxp)
+        y_io = jax.lax.broadcasted_iota(jnp.int32, shape, 1) + w0
+        x_io = jax.lax.broadcasted_iota(jnp.int32, shape, 2)
+        z_loc = jax.lax.broadcasted_iota(jnp.int32, shape, 0)
+        # Dirichlet / shard-interior bounds, dynamic (padded coordinates)
+        lo_z, hi_z = bounds_ref[0], bounds_ref[1]
+        lo_y, hi_y = bounds_ref[2], bounds_ref[3]
+        lo_x, hi_x = bounds_ref[4], bounds_ref[5]
+        xy_mask = ((x_io >= lo_x) & (x_io < hi_x)
+                   & (y_io >= lo_y) & (y_io < hi_y))
 
-def _row_prefetch(sched: tiling.DiamondSchedule, row_idx: int, d_w: int,
-                  r: int, ny: int, py: int):
-    """Per-tile window offsets and per-tau diamond y-ranges (padded coords)."""
-    h = d_w // (2 * r)
-    t_base = (row_idx - 1) * h
-    cols = list(range(-1, ny // d_w + 2))
-    by_col = {t.col: t for t in sched.rows_by_index().get(row_idx, ())}
-    t_steps = 2 * h
-    w0 = np.zeros(len(cols), np.int32)
-    y0s = np.zeros((len(cols), t_steps), np.int32)
-    y1s = np.zeros((len(cols), t_steps), np.int32)
-    for i, col in enumerate(cols):
-        center = col * d_w + r + (d_w // 2 if row_idx % 2 else 0)
-        w0[i] = center - d_w // 2 - r + py
-        tile = by_col.get(col)
-        if tile is not None:
-            for (t, a, b) in tile.spans:
-                tau = t - t_base
-                if 0 <= tau < t_steps:
-                    y0s[i, tau] = a + py
-                    y1s[i, tau] = b + py
-    return t_base, w0, y0s, y1s
+        # --- T in-tile updates at static buffer offsets -------------------
+        def updates(p0: int):
+            for tau in range(t_steps):
+                zb = r * (t_steps - tau)    # buffer row of the N_F targets
+                p = (p0 + tau) % 2
+                src_b, dst_b = bufs[p], bufs[1 - p]
+                ws = src_b[zb - r:zb + n_f + r]
+                pws = dst_b[zb - r:zb + n_f + r]
+                if spec.time_order == 2:
+                    cf = (coeff_buf[zb - r:zb + n_f + r], scalars)
+                elif spec.n_coeff_arrays:
+                    cf = coeff_buf[:, zb - r:zb + n_f + r]
+                else:
+                    cf = scalars
+                new = st.sweep_fn(spec)(ws, pws, cf)[r:r + n_f]
+
+                y0 = y0_ref[row, k, tau]
+                y1 = y1_ref[row, k, tau]
+                z_io = z_loc + (j * n_f - (tau + 1) * r)  # padded z coord
+                mask = ((y_io >= y0) & (y_io < y1)
+                        & (z_io >= lo_z) & (z_io < hi_z) & xy_mask)
+                dst_b[zb:zb + n_f] = jnp.where(mask, new, dst_b[zb:zb + n_f])
+
+        # buffer parity of the row's first time level is a prefetched scalar;
+        # refs cannot be selected dynamically, so branch on it statically
+        for p0 in (0, 1):
+            @pl.when(p0_ref[row] == p0)
+            def _upd(p0=p0):
+                updates(p0)
+
+        # --- emit the completed slab (both parities) ----------------------
+        @pl.when(j >= d_w // n_f)
+        def _out():
+            zs = j * n_f - d_w
+            for out, b in ((out_e, bufs[0]), (out_o, bufs[1])):
+                cp = pltpu.make_async_copy(
+                    b.at[pl.ds(r, n_f), pl.ds(r, d_w)],
+                    out.at[pl.ds(zs, n_f), pl.ds(w0 + r, d_w)], osem)
+                cp.start()
+                cp.wait()
+
+    if fused:
+        # inactive edge tiles own no spans: skip their streams entirely
+        @pl.when(act_ref[row, k] == 1)
+        def _active_tile():
+            tile_step()
+    else:
+        tile_step()
 
 
 def mwd_run(spec: st.StencilSpec, state, coeffs, n_steps: int, *,
-            d_w: int = 8, n_f: int = 2):
-    """Advance n_steps with row-wise MWD kernel passes: state -> state."""
+            d_w: int = 8, n_f: int = 2, fused: bool = True,
+            interior=None, y_domain: tuple[int, int] | None = None):
+    """Advance n_steps with the MWD schedule: state -> state.
+
+    fused=True (default) executes the whole compiled schedule in ONE
+    pallas_call with the parity grids aliased in place; fused=False launches
+    one pass per diamond row with freshly materialized grids (the legacy
+    mode, kept as the auto-tuner's comparison point).
+
+    interior: optional (6,) int32 [lo_z, hi_z, lo_y, hi_y, lo_x, hi_x] in
+    block coordinates — cells outside are held (Dirichlet / shard frame).
+    May be a traced array (the distributed stepper passes per-shard bounds).
+    Defaults to the R-deep frame of the block.
+
+    y_domain: (y_lo, y_hi) diamond tessellation extent; defaults to the
+    interior [R, ny-R). The distributed stepper passes (0, ny) so halo cells
+    advance intermediate levels too.
+    """
     r = spec.radius
     if d_w % (2 * r) or d_w % n_f:
         raise ValueError(f"need 2R | d_w and n_f | d_w (d_w={d_w}, R={r}, "
@@ -193,29 +230,51 @@ def mwd_run(spec: st.StencilSpec, state, coeffs, n_steps: int, *,
         scalars = tuple(float(x) for x in coeffs)
     scratch += [pltpu.SemaphoreType.DMA, pltpu.SemaphoreType.DMA]
 
-    sched = tiling.make_diamond_schedule(d_w, r, n_steps, r, ny - r)
-    out_sds = jax.ShapeDtypeStruct((nz_tot, nyp, nxp), cur.dtype)
-    dims = (nz, ny, nx, pz, py, px)
+    y_lo, y_hi = y_domain if y_domain is not None else (r, ny - r)
+    comp = tiling.compile_schedule(
+        tiling.make_diamond_schedule(d_w, r, n_steps, y_lo, y_hi))
+    if comp.n_rows == 0:                 # n_steps == 0: nothing to launch
+        return cur, prev
+    if interior is None:
+        interior = jnp.asarray([r, nz - r, r, ny - r, r, nx - r], jnp.int32)
+    bounds = (jnp.asarray(interior, jnp.int32)
+              + jnp.asarray([pz, pz, py, py, px, px], jnp.int32))
+    p0s = jnp.asarray(comp.parity, jnp.int32)
+    w0p = jnp.asarray(comp.w0 + py, jnp.int32)
+    y0p = jnp.asarray(comp.y0 + py, jnp.int32)
+    y1p = jnp.asarray(comp.y1 + py, jnp.int32)
+    act = jnp.asarray(comp.active, jnp.int32)
 
-    row_indices = sorted(sched.rows_by_index())
-    for row_idx in row_indices:
-        t_base, w0, y0s, y1s = _row_prefetch(sched, row_idx, d_w, r, ny, py)
-        p0 = t_base % 2
-        kern = functools.partial(_row_kernel, spec, d_w, n_f, p0, dims,
-                                 scalars, 2 + len(coeff_in))
-        bufs = list(pl.pallas_call(
+    out_sds = jax.ShapeDtypeStruct((nz_tot, nyp, nxp), cur.dtype)
+    n_in = 2 + len(coeff_in)
+
+    def launch(fused_mode, tables, n_rows, bufs_in, aliases):
+        kern = functools.partial(_mwd_kernel, spec, d_w, n_f, scalars,
+                                 n_in, fused_mode)
+        return pl.pallas_call(
             kern,
             grid_spec=pltpu.PrefetchScalarGridSpec(
-                num_scalar_prefetch=3,
-                grid=(len(w0), n_j),
-                in_specs=[pl.BlockSpec(memory_space=pl.ANY)] * (2 + len(coeff_in)),
+                num_scalar_prefetch=6,
+                grid=(n_rows, comp.n_tiles, n_j),
+                in_specs=[pl.BlockSpec(memory_space=pl.ANY)] * n_in,
                 out_specs=(pl.BlockSpec(memory_space=pl.ANY),) * 2,
                 scratch_shapes=scratch,
             ),
             out_shape=(out_sds, out_sds),
+            input_output_aliases=aliases,
             interpret=config.INTERPRET,
-        )(jnp.asarray(w0), jnp.asarray(y0s), jnp.asarray(y1s),
-          bufs[0], bufs[1], *coeff_in))
+        )(*tables, *bufs_in, *coeff_in)
+
+    if fused:
+        # single launch; parity grids aliased in place (inputs 6/7 after the
+        # six scalar-prefetch tables -> outputs 0/1)
+        bufs = list(launch(True, (bounds, p0s, w0p, y0p, y1p, act),
+                           comp.n_rows, bufs, {6: 0, 7: 1}))
+    else:
+        for i in range(comp.n_rows):
+            tables = (bounds, p0s[i:i + 1], w0p[i:i + 1], y0p[i:i + 1],
+                      y1p[i:i + 1], act[i:i + 1])
+            bufs = list(launch(False, tables, 1, bufs, {}))
 
     core = (slice(pz, pz + nz), slice(py, py + ny), slice(px, px + nx))
     p = n_steps % 2

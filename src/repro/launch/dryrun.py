@@ -17,6 +17,7 @@ import jax           # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
+from repro import compat  # noqa: E402
 from repro import configs  # noqa: E402
 from repro.configs.base import SHAPES, shape_applicable  # noqa: E402
 from repro.core import stencils as stc  # noqa: E402
@@ -64,7 +65,7 @@ def lower_lm_cell(cfg, shape_name: str, mesh, *, chunk: int = 2048,
     params_sh = shd.param_shardings(mesh, spec_tree)
     notes = f"N={n_total/1e9:.2f}B active={n_active/1e9:.2f}B accum={accum}"
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         if sinfo["kind"] == "train":
             state_sds, state_sh_fn = steps.train_state_specs(cfg,
                                                              stacked=stacked)
@@ -168,7 +169,7 @@ def lower_girih_cell(arch: str, grid_name: str, mesh, *, t_block: int = 0,
     else:
         coeff_sh = (NamedSharding(mesh, P()),) * 2
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         step = stepper.make_super_step(spec, mesh, (nz, ny, nx), tb,
                                        hoisted=hoisted)
         lowered = jax.jit(

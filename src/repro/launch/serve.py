@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
+from repro import compat, configs
 from repro.distributed import elastic
 from repro.models import lm
 from repro.models.params import tree_init
@@ -57,7 +57,7 @@ def main(argv=None):
         rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
         jnp.int32)
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         t0 = time.perf_counter()
         _, cache = prefill_into_cache(cfg, params, prompts)
         t_prefill = time.perf_counter() - t0

@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
+from repro import compat, configs
 from repro.data.pipeline import PipelineConfig, SyntheticPipeline
 from repro.distributed import checkpoint, elastic
 from repro.models import lm
@@ -99,7 +99,7 @@ def main(argv=None):
     guard = StepGuard()
     jstep = jax.jit(train_step, donate_argnums=(0,))
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         for step in range(start_step, args.steps):
             batch = pipe.get_batch(step, cfg)
             t0 = time.perf_counter()

@@ -9,12 +9,14 @@ from __future__ import annotations
 
 import jax
 
+from repro import compat
+
 BATCH = ("pod", "data")
 MODEL = "model"
 
 
 def constrain(x, *axes):
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or not mesh.axis_names:
         return x
     names = set(mesh.axis_names)

@@ -15,6 +15,8 @@ from __future__ import annotations
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
+
 from repro.models.params import ParamSpec, is_spec
 
 LOGICAL_RULES: dict[str | None, str | None] = {
@@ -62,7 +64,7 @@ def constrain_like_params(tree, spec_tree):
     sharded accumulation (reduce-scatter-like); see EXPERIMENTS.md SS Perf.
     No-op outside a mesh context.
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or not mesh.axis_names:
         return tree
     flat, treedef = jax.tree_util.tree_flatten(tree)

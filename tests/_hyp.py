@@ -1,0 +1,41 @@
+"""Optional-hypothesis shim for the property tests.
+
+CI installs hypothesis (declared in pyproject's ``test`` extra) and the
+property tests run for real. Minimal containers without hypothesis still
+collect and run every example-based test; the property tests degrade to a
+single runtime skip instead of failing the whole module at import time
+(the seed's ``ModuleNotFoundError: hypothesis`` collection error).
+"""
+
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    class _Anything:
+        """Stand-in for `strategies`: any strategy constructor -> None."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    strategies = _Anything()
+
+    def settings(*_a, **_k):
+        return lambda fn: fn
+
+    def given(*_a, **_k):
+        def deco(fn):
+            def skipper():
+                pytest.skip("hypothesis not installed")
+
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+
+        return deco

@@ -45,6 +45,19 @@ def test_seed_dw_respects_vmem(monkeypatch):
     assert not models.vmem_fits(spec, d + 2 * spec.radius, 1, n_xb)
 
 
+def test_fused_execution_preferred():
+    """The single-launch schedule saves inter-row streams + dispatches, so
+    the tuner keeps fused=True and scores it above the per-row mode."""
+    import dataclasses
+    for name in ("7pt-const", "25pt-var"):
+        spec = st.SPECS[name]
+        res = autotune.autotune(spec, (512, 512, 512), devices_x=2)
+        assert res.plan.fused
+        score = autotune.model_score(spec, (512, 512, 512))
+        assert score(res.plan) > score(
+            dataclasses.replace(res.plan, fused=False))
+
+
 def test_evaluations_bounded():
     res = autotune.autotune(st.SPECS["7pt-const"], (512, 512, 512),
                             devices_x=16, max_evals=16)

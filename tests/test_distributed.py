@@ -19,12 +19,14 @@ sys.path.insert(0, sys.argv[1])
 import jax, jax.numpy as jnp
 import numpy as np
 from functools import partial
+from jax.sharding import PartitionSpec as P
 from repro.core import stencils as st
+from repro.core.mwd import MWDPlan
+from repro.compat import shard_map
 from repro.distributed import stepper, compression, checkpoint
 from repro.distributed.stepper import GridSharding
 
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
 
 # 1. distributed deep-halo stepper == naive, all four stencils
 for name in st.SPECS:
@@ -38,6 +40,21 @@ for name in st.SPECS:
     assert err < 1e-4, (name, err)
 print("stepper OK")
 
+# 1a. MWD-kernel super-steps: ONE fused launch per halo exchange per device,
+#     both time orders, == naive
+for name in ("7pt-const", "25pt-const"):
+    spec = st.SPECS[name]
+    shape = (8, 8, 16) if spec.radius == 1 else (32, 16, 18)
+    state, coeffs = st.make_problem(spec, shape, seed=7)
+    T = 5
+    want = st.run_naive(spec, state, coeffs, T)
+    got = stepper.run_distributed(spec, mesh, state, coeffs, T, t_block=2,
+                                  plan=MWDPlan(d_w=2 * spec.radius, n_f=1))
+    err = float(jnp.max(jnp.abs(want[0] - jax.device_get(got[0]))))
+    err1 = float(jnp.max(jnp.abs(want[1] - jax.device_get(got[1]))))
+    assert err < 1e-4 and err1 < 1e-4, (name, err, err1)
+print("mwd-kernel stepper OK")
+
 # 1b. hoisted-coefficient variant (one-time halo exchange) is equivalent
 spec = st.SPECS["7pt-var"]
 state, coeffs = st.make_problem(spec, (8, 8, 16), seed=3)
@@ -50,9 +67,9 @@ print("hoisted OK")
 # 2. int8 error-feedback compressed pmean: exact for equal grads,
 #    residual-bounded otherwise, converges under accumulation
 def pod_mean(g, err):
-    f = jax.shard_map(lambda g, e: compression.compressed_pmean(g, e, "pod"),
-                      mesh=mesh, in_specs=(jax.P("pod"), jax.P("pod")),
-                      out_specs=(jax.P("pod"), jax.P("pod")))
+    f = shard_map(lambda g, e: compression.compressed_pmean(g, e, "pod"),
+                  mesh=mesh, in_specs=(P("pod"), P("pod")),
+                  out_specs=(P("pod"), P("pod")))
     return f(g, err)
 
 g = jnp.stack([jnp.full((4,), 2.0), jnp.full((4,), 2.0)])   # same on 2 pods
@@ -79,7 +96,6 @@ out = stepper.run_distributed(spec, mesh, state, coeffs, 2, t_block=2)
 d = sys.argv[2]
 checkpoint.save(d, 2, {"cur": out[0], "prev": out[1]})
 small = jax.make_mesh((2, 2), ("data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,) * 2,
                       devices=jax.devices()[:4])
 gs = GridSharding(small)
 _, restored = checkpoint.restore(d, {"cur": out[0], "prev": out[1]},

@@ -79,3 +79,63 @@ def test_mwd_kernel_nonmultiple_grid():
     want = ref.naive_steps(spec, state, coeffs, 5)
     got = ops.mwd(spec, state, coeffs, 5, d_w=8, n_f=4)
     assert _err(want[0], got[0]) < 5e-4
+
+
+@pytest.mark.parametrize("name", list(st.SPECS))
+def test_fused_mwd_matches_oracle_bitwise(name):
+    """The single-launch fused schedule == run_mwd oracle BITWISE, both
+    parities, all four corner-case stencils (interpret mode)."""
+    import numpy as np
+
+    from repro.core import mwd
+
+    spec = st.SPECS[name]
+    shape = (10, 20, 24) if spec.radius == 1 else (13, 21, 18)
+    d_w, n_f = 4 * spec.radius, 2
+    state, coeffs = st.make_problem(spec, shape, seed=11)
+    t_steps = 5
+    want = mwd.run_mwd(spec, state, coeffs, t_steps, mwd.MWDPlan(d_w=d_w))
+    got = ops.mwd(spec, state, coeffs, t_steps, d_w=d_w, n_f=n_f, fused=True)
+    np.testing.assert_array_equal(np.asarray(want[0]), np.asarray(got[0]))
+    np.testing.assert_array_equal(np.asarray(want[1]), np.asarray(got[1]))
+
+
+@pytest.mark.parametrize("name", list(st.SPECS))
+def test_fused_equals_per_row_launches(name):
+    """One launch for the whole schedule == one launch per diamond row."""
+    import numpy as np
+
+    spec = st.SPECS[name]
+    shape = (10, 20, 24) if spec.radius == 1 else (13, 21, 18)
+    d_w, n_f = 2 * spec.radius, 2 * spec.radius
+    state, coeffs = st.make_problem(spec, shape, seed=12)
+    fused = ops.mwd(spec, state, coeffs, 4, d_w=d_w, n_f=n_f, fused=True)
+    rows = ops.mwd(spec, state, coeffs, 4, d_w=d_w, n_f=n_f, fused=False)
+    np.testing.assert_array_equal(np.asarray(fused[0]), np.asarray(rows[0]))
+    np.testing.assert_array_equal(np.asarray(fused[1]), np.asarray(rows[1]))
+
+
+def test_mwd_zero_steps_is_identity():
+    """T=0 compiles to an empty schedule; both modes return state unchanged."""
+    import numpy as np
+
+    spec = st.SPEC_7C
+    state, coeffs = st.make_problem(spec, (8, 12, 10), seed=0)
+    for fused in (True, False):
+        out = ops.mwd(spec, state, coeffs, 0, d_w=4, n_f=2, fused=fused)
+        np.testing.assert_array_equal(np.asarray(out[0]),
+                                      np.asarray(state[0]))
+
+
+def test_fused_mwd_nonmultiple_grid_and_dtype():
+    spec = st.SPEC_7C
+    state, coeffs = st.make_problem(spec, (11, 19, 13), seed=9)
+    want = ref.naive_steps(spec, state, coeffs, 5)
+    got = ops.mwd(spec, state, coeffs, 5, d_w=8, n_f=4, fused=True)
+    assert _err(want[0], got[0]) < 5e-4
+    state, coeffs = st.make_problem(spec, (8, 16, 16), dtype=jnp.bfloat16,
+                                    seed=5)
+    want = ref.naive_steps(spec, state, coeffs, 2)
+    got = ops.mwd(spec, state, coeffs, 2, d_w=4, n_f=2, fused=True)
+    assert got[0].dtype == jnp.bfloat16
+    assert _err(want[0], got[0]) < _tol(jnp.bfloat16)

@@ -3,7 +3,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as hst
+from _hyp import given, settings, strategies as hst
 
 from repro import configs
 from repro.models import moe

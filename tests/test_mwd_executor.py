@@ -2,7 +2,7 @@
 
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as hst
+from _hyp import given, settings, strategies as hst
 
 from repro.core import mwd, stencils as st
 
@@ -30,6 +30,21 @@ def test_mwd_equals_naive_hypothesis_7pt(t_steps, k, ny):
     got = mwd.run_mwd(spec, state, coeffs, t_steps,
                       mwd.MWDPlan(d_w=2 * k))
     assert float(jnp.max(jnp.abs(ref[0] - got[0]))) < 1e-4
+
+
+@pytest.mark.parametrize("name", list(st.SPECS))
+def test_compiled_schedule_oracle_equals_run_mwd(name):
+    """Executing compile_schedule()'s dense tables reproduces run_mwd exactly
+    (validates the flattening the fused kernel consumes)."""
+    spec = st.SPECS[name]
+    shape = (10, 22, 12) if spec.radius == 1 else (12, 26, 14)
+    d_w = 4 * spec.radius
+    state, coeffs = st.make_problem(spec, shape, seed=13)
+    t_steps = 6
+    want = mwd.run_mwd(spec, state, coeffs, t_steps, mwd.MWDPlan(d_w=d_w))
+    got = mwd.run_compiled(spec, state, coeffs, t_steps, mwd.MWDPlan(d_w=d_w))
+    assert float(jnp.max(jnp.abs(want[0] - got[0]))) == 0.0
+    assert float(jnp.max(jnp.abs(want[1] - got[1]))) == 0.0
 
 
 def test_traffic_model_decreases_with_dw():

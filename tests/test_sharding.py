@@ -4,29 +4,24 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro import configs
+from repro import compat, configs
 from repro.models import lm
 from repro.models.params import ParamSpec
 from repro.training import sharding as shd, steps
 
 
 def _mesh(shape=(2, 2), axes=("data", "model")):
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-                         devices=[jax.devices()[0]] * 1
-                         if False else None)
+    return compat.make_mesh(shape, axes)
 
 
 def test_spec_pspec_basic():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     s = ParamSpec((64, 128), ("embed", "mlp"))
     assert shd.spec_pspec(mesh, s) == P("data", "model")
 
 
 def test_spec_pspec_divisibility_fallback():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     # 7 not divisible by even a size-1 axis is fine; use a fake big axis via
     # abstract mesh: use mesh of size 1 => divisible; emulate with size check
     s = ParamSpec((7, 128), ("heads", None))
@@ -35,16 +30,14 @@ def test_spec_pspec_divisibility_fallback():
 
 
 def test_spec_pspec_dedup_expert_wins():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     s = ParamSpec((8, 64, 128), ("experts", "embed", "mlp"))
     p = shd.spec_pspec(mesh, s)
     assert p == P("model", "data", None)  # mlp loses 'model' to experts
 
 
 def test_param_shardings_cover_tree():
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((1,), ("model",))
     cfg = configs.reduced(configs.get("mixtral-8x7b"))
     tree = lm.param_specs(cfg)
     sh = shd.param_shardings(mesh, tree)
@@ -73,8 +66,7 @@ def test_input_specs_all_cells_enumerate():
 
 
 def test_cache_shardings_rightmost_anchored():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     cfg = configs.reduced(configs.get("gemma3-1b"))
     for stacked in (False, True):
         tree = lm.cache_spec(cfg, 4, 64, stacked=stacked)

@@ -1,7 +1,7 @@
 """Property tests: the diamond tessellation covers space-time exactly once."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as hst
+from _hyp import given, settings, strategies as hst
 
 from repro.core import tiling
 
@@ -60,6 +60,59 @@ def test_dependency_covers_stencil_reach():
                     continue
                 # the producing tile is this tile, a dep, or an older row
                 assert owner in deps or owner[0] < tile.row
+
+
+def test_compile_schedule_tables_match_spans():
+    """Dense tables reproduce every span of every tile, and nothing else."""
+    for d_w, radius, t_total, ny in [(8, 1, 12, 41), (16, 4, 6, 33),
+                                     (4, 2, 9, 21)]:
+        sched = tiling.make_diamond_schedule(d_w, radius, t_total,
+                                             radius, radius + ny)
+        comp = tiling.compile_schedule(sched)
+        assert comp.t_steps == d_w // radius
+        spans_from_tables = set()
+        for i in range(comp.n_rows):
+            for k in range(comp.n_tiles):
+                for tau in range(comp.t_steps):
+                    a, b = int(comp.y0[i, k, tau]), int(comp.y1[i, k, tau])
+                    if b > a:
+                        assert comp.active[i, k] == 1
+                        t = int(comp.t_base[i]) + tau
+                        spans_from_tables.add((t, a, b))
+        spans_from_tiles = {(t, a, b) for tile in sched.tiles()
+                            for (t, a, b) in tile.spans}
+        assert spans_from_tables == spans_from_tiles
+
+
+def test_compile_schedule_order_respects_dependencies():
+    sched = tiling.make_diamond_schedule(8, 1, 10, 1, 38)
+    comp = tiling.compile_schedule(sched)
+    by_key = {(t.row, t.col): t for t in sched.tiles()}
+    assert set(comp.order) == set(by_key)
+    pos = {key: i for i, key in enumerate(comp.order)}
+    for key, tile in by_key.items():
+        for dep in sched.dependencies(tile):
+            assert pos[dep] < pos[key], (dep, key)
+
+
+def test_compile_schedule_parity_and_windows():
+    sched = tiling.make_diamond_schedule(8, 1, 7, 1, 25)
+    comp = tiling.compile_schedule(sched)
+    h = sched.half_height
+    for i in range(comp.n_rows):
+        # negative t_base (row 0 starts before t=0) still yields parity 0/1
+        assert comp.parity[i] == int(comp.t_base[i]) % 2
+        assert comp.parity[i] in (0, 1)
+    # every update range lies inside its tile's stencil-extended window
+    for i in range(comp.n_rows):
+        assert int(comp.t_base[i]) == (sorted(sched.rows_by_index())[i] - 1) * h
+        for k in range(comp.n_tiles):
+            w0 = int(comp.w0[i, k])
+            for tau in range(comp.t_steps):
+                a, b = int(comp.y0[i, k, tau]), int(comp.y1[i, k, tau])
+                if b > a:
+                    assert w0 + comp.radius <= a
+                    assert b <= w0 + comp.radius + comp.d_w
 
 
 def test_wavefront_width_matches_paper():

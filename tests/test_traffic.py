@@ -1,0 +1,38 @@
+"""Exact kernel DMA accounting: fused single launch vs per-row launches."""
+
+import pytest
+
+from benchmarks import traffic
+from repro.core import stencils as st
+
+
+@pytest.mark.parametrize("name", list(st.SPECS))
+@pytest.mark.parametrize("k,n_f", [(1, 1), (2, 2)])
+def test_fused_bytes_strictly_below_per_row(name, k, n_f):
+    """The fused schedule skips the inactive edge tiles every per-row launch
+    streams, so its modeled HBM bytes are strictly below for every stencil."""
+    spec = st.SPECS[name]
+    d_w = 2 * spec.radius * k
+    grid = (32, 48, 40)
+    tf = traffic.mwd_run_traffic(spec, grid, 6, d_w, n_f, fused=True)
+    tr = traffic.mwd_run_traffic(spec, grid, 6, d_w, n_f, fused=False)
+    assert tf["bytes"] < tr["bytes"]
+    assert tf["launches"] == 1
+    assert tr["launches"] == tr["rows"] > 1
+    assert tf["lups"] == tr["lups"]
+
+
+def test_fused_code_balance_decreases_with_dw():
+    spec = st.SPECS["7pt-var"]
+    bc = [traffic.mwd_run_traffic(spec, (64, 64, 64), 8, d, 2, fused=True)
+          ["code_balance"] for d in (4, 8, 16)]
+    assert bc == sorted(bc, reverse=True)
+
+
+def test_run_traffic_scales_with_steps():
+    """Twice the steps -> more rows -> more bytes, same bytes/LUP ballpark."""
+    spec = st.SPECS["7pt-const"]
+    t1 = traffic.mwd_run_traffic(spec, (32, 32, 32), 4, 4, 2, fused=True)
+    t2 = traffic.mwd_run_traffic(spec, (32, 32, 32), 8, 4, 2, fused=True)
+    assert t2["bytes"] > t1["bytes"]
+    assert t2["rows"] > t1["rows"]
