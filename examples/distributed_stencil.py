@@ -18,32 +18,38 @@ from repro import compat                                     # noqa: E402
 from repro.core import stencils as st                        # noqa: E402
 from repro.distributed import checkpoint, stepper            # noqa: E402
 
-spec = st.SPECS["7pt-var"]
-shape = (16, 16, 32)
-T1, T2 = 4, 4
-state, coeffs = st.make_problem(spec, shape, seed=11)
 
-# phase 1: healthy 2x2x2 mesh (2 pods)
-mesh = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
-out = stepper.run_distributed(spec, mesh, state, coeffs, T1, t_block=2)
-ckpt_dir = "/tmp/dist_stencil_ckpt"
-checkpoint.save(ckpt_dir, T1, {"cur": out[0], "prev": out[1]})
-print(f"phase 1: {T1} steps on {mesh.devices.size} devices, checkpointed")
+def main():
+    spec = st.SPECS["7pt-var"]
+    shape = (16, 16, 32)
+    T1, T2 = 4, 4
+    state, coeffs = st.make_problem(spec, shape, seed=11)
 
-# phase 2: a pod dies -> rebuild on 4 devices, reshard, continue
-small = compat.make_mesh((2, 2), ("data", "model"),
-                         devices=jax.devices()[:4])
-gs = stepper.GridSharding(small)
-_, restored = checkpoint.restore(
-    ckpt_dir, {"cur": out[0], "prev": out[1]},
-    sharding_fn=lambda name, leaf: gs.sharding())
-out2 = stepper.run_distributed(spec, small, (restored["cur"],
-                                             restored["prev"]),
-                               coeffs, T2, t_block=2)
-print(f"phase 2: {T2} more steps on degraded {small.devices.size}-device mesh")
+    # phase 1: healthy 2x2x2 mesh (2 pods)
+    mesh = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    out = stepper.run_distributed(spec, mesh, state, coeffs, T1, t_block=2)
+    ckpt_dir = "/tmp/dist_stencil_ckpt"
+    checkpoint.save(ckpt_dir, T1, {"cur": out[0], "prev": out[1]})
+    print(f"phase 1: {T1} steps on {mesh.devices.size} devices, checkpointed")
 
-ref = st.run_naive(spec, state, coeffs, T1 + T2)
-err = float(jnp.max(jnp.abs(ref[0] - jax.device_get(out2[0]))))
-print(f"elastic-restart result vs naive: max|err| = {err:.2e}")
-assert err < 1e-4
-print("verified: pod loss -> reshard -> continue is exact.")
+    # phase 2: a pod dies -> rebuild on 4 devices, reshard, continue
+    small = compat.make_mesh((2, 2), ("data", "model"),
+                             devices=jax.devices()[:4])
+    gs = stepper.GridSharding(small)
+    _, restored = checkpoint.restore(
+        ckpt_dir, {"cur": out[0], "prev": out[1]},
+        sharding_fn=lambda name, leaf: gs.sharding())
+    out2 = stepper.run_distributed(spec, small, (restored["cur"],
+                                                 restored["prev"]),
+                                   coeffs, T2, t_block=2)
+    print(f"phase 2: {T2} more steps on degraded {small.devices.size}-device mesh")
+
+    ref = st.run_naive(spec, state, coeffs, T1 + T2)
+    err = float(jnp.max(jnp.abs(ref[0] - jax.device_get(out2[0]))))
+    print(f"elastic-restart result vs naive: max|err| = {err:.2e}")
+    assert err < 1e-4
+    print("verified: pod loss -> reshard -> continue is exact.")
+
+
+if __name__ == "__main__":
+    main()

@@ -23,60 +23,65 @@ from repro.core import stencils as st
 from repro.core.mwd import MWDPlan, run_mwd
 from repro.distributed import checkpoint
 
-ap = argparse.ArgumentParser()
-ap.add_argument("--n", type=int, default=64)
-ap.add_argument("--steps", type=int, default=240)
-ap.add_argument("--span", type=int, default=24, help="steps per MWD pass")
-ap.add_argument("--dw", type=int, default=8)
-ap.add_argument("--ckpt", default="/tmp/heat3d_ckpt")
-ap.add_argument("--ckpt-every", type=int, default=48)
-ap.add_argument("--resume", action="store_true")
-ap.add_argument("--verify", action="store_true")
-args = ap.parse_args()
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=64)
+    ap.add_argument("--steps", type=int, default=240)
+    ap.add_argument("--span", type=int, default=24, help="steps per MWD pass")
+    ap.add_argument("--dw", type=int, default=8)
+    ap.add_argument("--ckpt", default="/tmp/heat3d_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=48)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--verify", action="store_true")
+    args = ap.parse_args(argv)
 
-spec = st.SPECS["7pt-const"]
-shape = (args.n, args.n, args.n)
+    spec = st.SPECS["7pt-const"]
+    shape = (args.n, args.n, args.n)
 
-# heat kernel: stable explicit Euler (c0 = 1-6k, c1 = k)
-kappa = 0.1
-coeffs = (jnp.float32(1 - 6 * kappa), jnp.float32(kappa))
-rng = np.random.default_rng(3)
-u0 = jnp.asarray(rng.standard_normal(shape), jnp.float32)
-state = (u0, u0)
+    # heat kernel: stable explicit Euler (c0 = 1-6k, c1 = k)
+    kappa = 0.1
+    coeffs = (jnp.float32(1 - 6 * kappa), jnp.float32(kappa))
+    rng = np.random.default_rng(3)
+    u0 = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    state = (u0, u0)
 
-start = 0
-if args.resume and checkpoint.latest_step(args.ckpt) is not None:
-    start, restored = checkpoint.restore(
-        args.ckpt, {"cur": u0, "prev": u0})
-    state = (restored["cur"], restored["prev"])
-    print(f"resumed at step {start}")
-elif os.path.isdir(args.ckpt) and not args.resume:
-    import shutil
-    shutil.rmtree(args.ckpt, ignore_errors=True)
+    start = 0
+    if args.resume and checkpoint.latest_step(args.ckpt) is not None:
+        start, restored = checkpoint.restore(
+            args.ckpt, {"cur": u0, "prev": u0})
+        state = (restored["cur"], restored["prev"])
+        print(f"resumed at step {start}")
+    elif os.path.isdir(args.ckpt) and not args.resume:
+        import shutil
+        shutil.rmtree(args.ckpt, ignore_errors=True)
 
-ck = checkpoint.AsyncCheckpointer(args.ckpt)
-plan = MWDPlan(d_w=args.dw)
-lups = 0
-t0 = time.perf_counter()
-step = start
-while step < args.steps:
-    span = min(args.span, args.steps - step,
-               args.ckpt_every - step % args.ckpt_every)
-    state = run_mwd(spec, state, coeffs, span, plan)
-    step += span
-    lups += span * np.prod(shape)
-    if step % args.ckpt_every == 0 or step == args.steps:
-        ck.save(step, {"cur": state[0], "prev": state[1]})
-        print(f"step {step:5d}  mean={float(jnp.mean(state[0])):+.6f} "
-              f"max={float(jnp.max(jnp.abs(state[0]))):.4f}  [checkpointed]")
-ck.wait_pending()
-dt = time.perf_counter() - t0
-print(f"{args.steps - start} steps in {dt:.1f}s  "
-      f"({lups / dt / 1e6:.1f} MLUP/s on CPU jnp executor)")
+    ck = checkpoint.AsyncCheckpointer(args.ckpt)
+    plan = MWDPlan(d_w=args.dw)
+    lups = 0
+    t0 = time.perf_counter()
+    step = start
+    while step < args.steps:
+        span = min(args.span, args.steps - step,
+                   args.ckpt_every - step % args.ckpt_every)
+        state = run_mwd(spec, state, coeffs, span, plan)
+        step += span
+        lups += span * np.prod(shape)
+        if step % args.ckpt_every == 0 or step == args.steps:
+            ck.save(step, {"cur": state[0], "prev": state[1]})
+            print(f"step {step:5d}  mean={float(jnp.mean(state[0])):+.6f} "
+                  f"max={float(jnp.max(jnp.abs(state[0]))):.4f}  [checkpointed]")
+    ck.wait_pending()
+    dt = time.perf_counter() - t0
+    print(f"{args.steps - start} steps in {dt:.1f}s  "
+          f"({lups / dt / 1e6:.1f} MLUP/s on CPU jnp executor)")
 
-if args.verify:
-    ref = st.run_naive(spec, (u0, u0), coeffs, args.steps)
-    err = float(jnp.max(jnp.abs(ref[0] - state[0])))
-    print(f"verify vs naive straight-through: max|err| = {err:.2e}")
-    assert err < 1e-4
-    print("verified.")
+    if args.verify:
+        ref = st.run_naive(spec, (u0, u0), coeffs, args.steps)
+        err = float(jnp.max(jnp.abs(ref[0] - state[0])))
+        print(f"verify vs naive straight-through: max|err| = {err:.2e}")
+        assert err < 1e-4
+        print("verified.")
+
+
+if __name__ == "__main__":
+    main()

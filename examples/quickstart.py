@@ -16,28 +16,37 @@ from repro.kernels import ops
 GRID = (24, 32, 40)
 STEPS = 4
 
-for name, spec in st.SPECS.items():
-    state, coeffs = st.make_problem(spec, GRID, seed=0)
-    ref = ops.naive(spec, state, coeffs, STEPS)
 
-    d_w = 8 if spec.radius == 1 else 16
-    results = {
-        "spatial-kernel": ops.spatial(spec, state, coeffs, STEPS, bz=4),
-        "ghostzone-kernel": ops.ghostzone(spec, state, coeffs, STEPS,
-                                          t_block=2, bz=8, by=8),
-        "mwd-kernel": ops.mwd(spec, state, coeffs, STEPS, d_w=d_w, n_f=2),
-        "mwd-executor": run_mwd(spec, state, coeffs, STEPS,
-                                MWDPlan(d_w=d_w)),
-    }
-    errs = {k: float(jnp.max(jnp.abs(v[0] - ref[0])))
-            for k, v in results.items()}
-    bc_spatial = models.spatial_code_balance(spec, 4)
-    bc_mwd = models.code_balance(spec, d_w, 4)
-    print(f"{name:11s} max|err| vs naive: "
-          + "  ".join(f"{k}={v:.1e}" for k, v in errs.items()))
-    print(f"{'':11s} code balance: spatial {bc_spatial:5.1f} B/LUP -> "
-          f"MWD(D_w={d_w}) {bc_mwd:5.2f} B/LUP "
-          f"({bc_spatial/bc_mwd:.1f}x less HBM traffic)")
-    assert all(e < 1e-3 for e in errs.values()), errs
-print("\nall methods agree; see benchmarks/ and EXPERIMENTS.md for the "
-      "full reproduction")
+def main():
+    for name, spec in st.SPECS.items():
+        state, coeffs = st.make_problem(spec, GRID, seed=0)
+        ref = ops.naive(spec, state, coeffs, STEPS)
+
+        d_w = 8 if spec.radius == 1 else 16
+        results = {
+            "spatial-kernel": ops.spatial(spec, state, coeffs, STEPS, bz=4),
+            "ghostzone-kernel": ops.ghostzone(spec, state, coeffs, STEPS,
+                                              t_block=2, bz=8, by=8),
+            "mwd-kernel": ops.mwd(spec, state, coeffs, STEPS, d_w=d_w, n_f=2),
+            # tuned-plan resolution: registry-first (run
+            # `python -m repro.launch.tune` once), model-scored fallback here
+            "mwd-auto": ops.mwd(spec, state, coeffs, STEPS, plan="auto"),
+            "mwd-executor": run_mwd(spec, state, coeffs, STEPS,
+                                    MWDPlan(d_w=d_w)),
+        }
+        errs = {k: float(jnp.max(jnp.abs(v[0] - ref[0])))
+                for k, v in results.items()}
+        bc_spatial = models.spatial_code_balance(spec, 4)
+        bc_mwd = models.code_balance(spec, d_w, 4)
+        print(f"{name:11s} max|err| vs naive: "
+              + "  ".join(f"{k}={v:.1e}" for k, v in errs.items()))
+        print(f"{'':11s} code balance: spatial {bc_spatial:5.1f} B/LUP -> "
+              f"MWD(D_w={d_w}) {bc_mwd:5.2f} B/LUP "
+              f"({bc_spatial/bc_mwd:.1f}x less HBM traffic)")
+        assert all(e < 1e-3 for e in errs.values()), errs
+    print("\nall methods agree; see benchmarks/ and EXPERIMENTS.md for the "
+          "full reproduction")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,3 +1,14 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""The paper's core: stencil specs, diamond/wavefront tiling, analytic models.
+
+Layering (each module is pure and importable on its own):
+
+* `stencils`  — the four corner-case stencil operators (Listings 1-4)
+* `tiling`    — diamond + wavefront space-time tessellation and the
+  schedule compiler that flattens it into dense launch tables
+* `mwd`       — the MWD executor (semantic oracle for the Pallas kernels)
+* `models`    — VMEM-fit / code-balance / ECM-TPU / roofline / energy models
+* `autotune`  — model-pruned plan search (analytic or measured scoring)
+* `registry`  — persistent tuned-plan cache consumed by `kernels.ops` and
+  the distributed stepper
+* `scheduler` — dynamic dependency-respecting tile queue
+"""

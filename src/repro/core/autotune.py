@@ -26,9 +26,17 @@ from repro.core.stencils import StencilSpec
 
 @dataclasses.dataclass(frozen=True)
 class TuneResult:
+    """Winner of one auto-tuning search plus every plan it scored."""
+
     plan: MWDPlan
     score: float                      # higher is better (e.g. GLUP/s)
     evaluated: tuple[tuple[MWDPlan, float], ...]
+
+
+def _plan_valid(spec: StencilSpec, plan: MWDPlan) -> bool:
+    """Whether the MWD kernel accepts the plan (2R | D_w and N_F | D_w)."""
+    return (plan.d_w % (2 * spec.radius) == 0 and plan.n_f >= 1
+            and plan.d_w % plan.n_f == 0)
 
 
 def model_score(spec: StencilSpec, grid_shape, word_bytes: int = 4,
@@ -37,6 +45,8 @@ def model_score(spec: StencilSpec, grid_shape, word_bytes: int = 4,
     nz, ny, nx = grid_shape
 
     def score(plan: MWDPlan) -> float:
+        if not _plan_valid(spec, plan):
+            return -math.inf
         n_xb = (nx // plan.tg_x) * word_bytes * spec.bytes_per_cell
         if not models.vmem_fits(spec, plan.d_w, plan.n_f, n_xb, chip):
             return -math.inf
@@ -64,11 +74,77 @@ def model_score(spec: StencilSpec, grid_shape, word_bytes: int = 4,
     return score
 
 
-def _neighbors(plan: MWDPlan, radius: int) -> list[MWDPlan]:
+def measure_score(spec: StencilSpec, grid_shape, word_bytes: int = 4,
+                  chip: hw.ChipSpec = hw.V5E, *, n_steps: int = 4,
+                  reps: int = 3, warmup: int = 1,
+                  seed: int = 0) -> Callable[[MWDPlan], float]:
+    """Measured scorer: wall-clock GLUP/s of the real `ops.mwd` launch.
+
+    This is the paper's Fig. 7 measurement step: the candidate plan is
+    compiled and run as the actual Pallas MWD launch (fused single-launch or
+    per-row, whichever `plan.fused` says), timed as the median of `reps`
+    calls after `warmup` untimed ones. Infeasible plans (kernel-invalid
+    geometry, VMEM overflow per Eq. 3) are pruned by the model *without*
+    measuring — the model-pruned search that makes measurement affordable.
+
+    The state is float32 (the container's measurement dtype); `word_bytes`
+    only parameterizes the analytic VMEM prune. `tg_x > 1` plans are timed
+    on this device's share of the grid, `nx // tg_x`.
+
+    The returned callable counts launches in its `measurements` attribute,
+    which is how `repro.launch.tune` proves a registry hit measured nothing.
+    """
+    import time as _time
+
+    import jax
+    import numpy as np
+
+    from repro.kernels import ops          # deferred: keeps core jax-light
+    from repro.core import stencils as st
+
+    nz, ny, nx = grid_shape
+    problems: dict[int, tuple] = {}
+
+    def score(plan: MWDPlan) -> float:
+        if not _plan_valid(spec, plan):
+            return -math.inf
+        nx_l = nx // plan.tg_x
+        if nx_l <= 2 * spec.radius:
+            return -math.inf               # no interior left on this device
+        n_xb = nx_l * word_bytes * spec.bytes_per_cell
+        if not models.vmem_fits(spec, plan.d_w, plan.n_f, n_xb, chip):
+            return -math.inf
+        if nx_l not in problems:
+            problems[nx_l] = st.make_problem(spec, (nz, ny, nx_l), seed=seed)
+        state, coeffs = problems[nx_l]
+
+        def launch():
+            out = ops.mwd(spec, state, coeffs, n_steps, d_w=plan.d_w,
+                          n_f=plan.n_f, fused=plan.fused)
+            jax.block_until_ready(out)
+            return out
+
+        for _ in range(warmup):
+            launch()
+        times = []
+        for _ in range(reps):
+            t0 = _time.perf_counter()
+            launch()
+            times.append(_time.perf_counter() - t0)
+        score.measurements += 1
+        lups = nz * ny * nx_l * n_steps
+        return lups / float(np.median(times)) / 1e9
+
+    score.measurements = 0
+    return score
+
+
+def _neighbors(plan: MWDPlan, radius: int,
+               d_w_cap: int | None = None) -> list[MWDPlan]:
     step = 2 * radius
     cands = []
     for d_w in (plan.d_w - step, plan.d_w + step):
-        if d_w >= step:
+        if d_w >= step and (d_w_cap is None or d_w <= d_w_cap):
             cands.append(dataclasses.replace(plan, d_w=d_w))
     for n_f in (plan.n_f - 1, plan.n_f + 1, plan.n_f * 2):
         if n_f >= 1 and n_f != plan.n_f:
@@ -79,21 +155,33 @@ def _neighbors(plan: MWDPlan, radius: int) -> list[MWDPlan]:
     return cands
 
 
-def _seed_d_w(spec: StencilSpec, n_xb: int, chip: hw.ChipSpec) -> int:
+def _seed_d_w(spec: StencilSpec, n_xb: int, chip: hw.ChipSpec,
+              d_w_cap: int | None = None) -> int:
     """Largest D_w fitting VMEM (Eq. 3) — the model-pruned starting point."""
     step = 2 * spec.radius
+    cap = 4096 if d_w_cap is None else max(step, (d_w_cap // step) * step)
     d_w = step
-    while models.vmem_fits(spec, d_w + step, 1, n_xb, chip):
+    while d_w + step <= cap and models.vmem_fits(spec, d_w + step, 1, n_xb,
+                                                 chip):
         d_w += step
-        if d_w > 4096:
-            break
     return d_w
 
 
 def autotune(spec: StencilSpec, grid_shape, devices_x: int = 1,
              measure: Callable[[MWDPlan], float] | None = None,
              chip: hw.ChipSpec = hw.V5E, word_bytes: int = 4,
-             max_evals: int = 64) -> TuneResult:
+             max_evals: int = 64, d_w_cap: int | None = None) -> TuneResult:
+    """Model-pruned local search for the best MWD plan (paper Fig. 7).
+
+    `measure` scores candidates: `model_score` (analytic, the default) or
+    `measure_score` (wall-clock on the real launch — the measured tuning
+    path `repro.launch.tune` drives). The default `MWDPlan()` is always
+    evaluated first, so the winner never scores below the untuned baseline.
+
+    `d_w_cap` bounds the diamond width the search may try; measured runs cap
+    it at the grid's y extent so the seed (sized for VMEM, Eq. 3) cannot
+    dwarf a sanity-scale problem.
+    """
     nz, ny, nx = grid_shape
     measure = measure or model_score(spec, grid_shape, word_bytes, chip)
     evaluated: dict[MWDPlan, float] = {}
@@ -103,24 +191,27 @@ def autotune(spec: StencilSpec, grid_shape, devices_x: int = 1,
             evaluated[plan] = measure(plan)
         return evaluated.get(plan, -math.inf)
 
+    # the untuned default is the floor every tuned result must clear
+    baseline = MWDPlan()
+    best: tuple[float, MWDPlan] = (eval_plan(baseline), baseline)
+
     # thread-group factorization (Fig. 7 step 2): tg_x over divisors
     tg_sizes = [d for d in range(1, devices_x + 1) if devices_x % d == 0]
-    best: tuple[float, MWDPlan] | None = None
     for tg in tg_sizes:
         n_xb = (nx // tg) * word_bytes * spec.bytes_per_cell
-        seed = MWDPlan(d_w=_seed_d_w(spec, n_xb, chip), n_f=1, tg_x=tg)
+        seed = MWDPlan(d_w=_seed_d_w(spec, n_xb, chip, d_w_cap), n_f=1,
+                       tg_x=tg)
         cur, cur_score = seed, eval_plan(seed)
         while True:  # local hill-climb (paper's recursive local search)
             improved = False
-            for cand in _neighbors(cur, spec.radius):
+            for cand in _neighbors(cur, spec.radius, d_w_cap):
                 s = eval_plan(cand)
                 if s > cur_score:
                     cur, cur_score, improved = cand, s, True
             if not improved:
                 break
-        if best is None or cur_score > best[0]:
+        if cur_score > best[0]:
             best = (cur_score, cur)
 
-    assert best is not None
     return TuneResult(plan=best[1], score=best[0],
                       evaluated=tuple(evaluated.items()))

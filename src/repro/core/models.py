@@ -40,8 +40,11 @@ def cache_block_bytes(spec: StencilSpec, d_w: int, n_f: int, n_xb: int) -> float
 
 def vmem_fits(spec: StencilSpec, d_w: int, n_f: int, n_xb: int,
               chip: hw.ChipSpec = hw.V5E, double_buffer: bool = True) -> bool:
-    """VMEM-fit constraint for the auto-tuner (software-managed: exact,
-    +2x if the in/out DMA slabs are double-buffered)."""
+    """VMEM-fit constraint for the auto-tuner (Eq. 3).
+
+    Software-managed memory makes the footprint exact; `double_buffer` adds
+    2x the in/out DMA slab buffers the pipelined kernel keeps in flight.
+    """
     need = cache_block_bytes(spec, d_w, n_f, n_xb)
     if double_buffer:
         need += 2.0 * n_xb * n_f * spec.bytes_per_cell  # in+out slab buffers
@@ -66,6 +69,7 @@ def code_balance(spec: StencilSpec, d_w: int, word_bytes: int = 8) -> float:
 
 
 def spatial_code_balance(spec: StencilSpec, word_bytes: int = 8) -> float:
+    """Optimal spatial-blocking code balance, bytes/LUP (the MWD baseline)."""
     return spec.spatial_code_balance(word_bytes)
 
 
@@ -143,6 +147,8 @@ def ghostzone_redundancy(radius: int, t_b: int, block_y: int, block_z: int) -> f
 
 @dataclasses.dataclass(frozen=True)
 class EcmPrediction:
+    """ECM-TPU runtime terms for one LUP batch (all in seconds)."""
+
     t_compute: float          # s per LUP batch: vector execution
     t_vmem: float             # s: VMEM<->VREG traffic (overlappable on TPU)
     t_hbm: float              # s: HBM<->VMEM traffic at code balance B_C
@@ -150,6 +156,7 @@ class EcmPrediction:
 
     @property
     def t_total(self) -> float:
+        """Steady-state runtime bound: max of the three overlapped terms."""
         # TPU DMA engines overlap VMEM traffic with compute; HBM DMA overlaps
         # too, so the steady-state bound is the max of the three (roofline
         # limit); the paper's non-overlapping T_nOL has no TPU analogue
@@ -158,12 +165,19 @@ class EcmPrediction:
 
     @property
     def glups(self) -> float:
+        """Predicted throughput in giga lattice updates per second."""
         return self.lups / self.t_total / 1e9
 
 
 def ecm_predict(spec: StencilSpec, code_balance_bytes: float, lups: float,
                 chip: hw.ChipSpec = hw.V5E, word_bytes: int = 4,
                 redundancy: float = 1.0) -> EcmPrediction:
+    """ECM-TPU prediction for `lups` updates at the given code balance.
+
+    `redundancy` > 1 prices overlapped (ghost-zone) kernels, which recompute
+    halo cells; the memory terms scale with it too since redundant cells are
+    streamed through VMEM like real ones.
+    """
     flops = spec.flops_per_lup * lups * redundancy
     # VMEM traffic: every LUP streams its stencil reads once through VREGs;
     # approximate with (n_streams + 1) words per LUP (in-VMEM reuse of
@@ -194,18 +208,22 @@ class RooflineTerms:
 
     @property
     def dominant(self) -> str:
+        """Name of the binding term: "compute", "memory" or "collective"."""
         terms = {"compute": self.t_compute, "memory": self.t_memory,
                  "collective": self.t_collective}
         return max(terms, key=terms.get)
 
     @property
     def t_bound(self) -> float:
+        """Roofline-limited runtime: the largest of the three terms."""
         return max(self.t_compute, self.t_memory, self.t_collective)
 
     @property
     def roofline_fraction(self) -> float:
-        """Fraction of the binding roofline the dominant term could achieve if
-        perfectly overlapped with the others (1.0 = at the roof)."""
+        """Fraction of the binding roofline achievable with perfect overlap.
+
+        1.0 means the dominant term fully hides the other two (at the roof).
+        """
         s = self.t_compute + self.t_memory + self.t_collective
         return self.t_bound / s if s else 0.0
 
@@ -213,6 +231,7 @@ class RooflineTerms:
 def roofline(flops_per_device: float, bytes_per_device: float,
              coll_bytes_per_device: float,
              chip: hw.ChipSpec = hw.V5E) -> RooflineTerms:
+    """The three graded roofline terms for per-device FLOPs/bytes/collective."""
     return RooflineTerms(
         t_compute=flops_per_device / chip.peak_flops_bf16,
         t_memory=bytes_per_device / chip.hbm_bw,
@@ -229,17 +248,21 @@ def roofline(flops_per_device: float, bytes_per_device: float,
 
 @dataclasses.dataclass(frozen=True)
 class EnergyEstimate:
+    """Energy split of one run: incremental core + HBM plus static draw."""
+
     core_j: float
     hbm_j: float
     static_j: float
 
     @property
     def total_j(self) -> float:
+        """Total energy in joules."""
         return self.core_j + self.hbm_j + self.static_j
 
 
 def energy(flops: float, hbm_bytes: float, runtime_s: float,
            chip: hw.ChipSpec = hw.V5E) -> EnergyEstimate:
+    """Fig. 19 energy model: E = P_static*T + e_flop*F + e_byte*B_hbm."""
     return EnergyEstimate(
         core_j=chip.joules_per_flop * flops,
         hbm_j=chip.joules_per_hbm_byte * hbm_bytes,

@@ -46,6 +46,7 @@ class MWDPlan:
     fused: bool = True    # single-launch compiled schedule vs one launch/row
 
     def wavefront(self, radius: int) -> tiling.WavefrontPlan:
+        """Wavefront geometry of this plan for stencil radius `radius`."""
         t_b = self.d_w // (2 * radius)  # diamond half-height
         return tiling.WavefrontPlan(d_w=self.d_w, radius=radius,
                                     n_f=self.n_f, t_block=t_b)
@@ -101,10 +102,12 @@ def run_mwd(spec: st.StencilSpec, state, coeffs, n_steps: int,
 
 def run_compiled(spec: st.StencilSpec, state, coeffs, n_steps: int,
                  plan: MWDPlan):
-    """Oracle over the *compiled* schedule tables: identical semantics to
-    run_mwd, but driven by compile_schedule()'s dense arrays in their
-    row-major launch order — this validates the flattening (offsets, y-ranges,
-    parity, active mask) independently of the Pallas kernel that consumes it.
+    """Oracle over the *compiled* schedule tables.
+
+    Identical semantics to run_mwd, but driven by compile_schedule()'s dense
+    arrays in their row-major launch order — this validates the flattening
+    (offsets, y-ranges, parity, active mask) independently of the Pallas
+    kernel that consumes it.
     """
     cur, prev = state
     ny = cur.shape[1]
@@ -133,6 +136,7 @@ def run_compiled(spec: st.StencilSpec, state, coeffs, n_steps: int,
 
 
 def run_naive(spec: st.StencilSpec, state, coeffs, n_steps: int):
+    """Reference: n_steps sequential naive sweeps (re-export for symmetry)."""
     return st.run_naive(spec, state, coeffs, n_steps)
 
 

@@ -1,0 +1,243 @@
+"""Persistent tuned-plan registry: measured auto-tuning results, cached on disk.
+
+The paper's auto-tuner (Sec. 4.2.2) is only worth its search cost if the
+result is reused: tune once per (stencil, grid, hardware), then every later
+run — `ops.mwd(plan="auto")`, the distributed stepper, the serving loop, the
+benchmarks — resolves the stored plan in O(1) and performs zero measurements.
+
+Registry layout (one JSON file, human-diffable):
+
+    {"version": 1,
+     "plans": {"<stencil>|<nz>x<ny>x<nx>|w<word>|dx<devices_x>": {
+         "plan": {"d_w": 16, "n_f": 2, "tg_x": 1, "fused": true, ...},
+         "score": 12.3, "source": "measured", "evals": 14,
+         "fingerprint": "<hw.fingerprint() at tune time>"}}}
+
+Invalidation: entries record the hardware fingerprint they were tuned on;
+a lookup under a different fingerprint treats the entry as stale (dropped on
+the next save) so a registry file carried to new hardware silently re-tunes
+instead of replaying a wrong plan. Lookups that miss fall back to the
+analytic model score (`autotune.model_score`) — fast, measurement-free —
+and the fallback is memoized per process but never persisted: only the
+deliberate `python -m repro.launch.tune` run writes measured entries.
+
+The file location is `$REPRO_PLAN_REGISTRY` when set, else
+`.repro_cache/plans.json` under the current directory (gitignored).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+
+from repro import hw
+from repro.core.mwd import MWDPlan
+from repro.core.stencils import StencilSpec
+
+SCHEMA_VERSION = 1
+ENV_VAR = "REPRO_PLAN_REGISTRY"
+DEFAULT_PATH = os.path.join(".repro_cache", "plans.json")
+
+
+def default_grid(spec: StencilSpec) -> tuple[int, int, int]:
+    """CPU-scale default tuning grid per stencil (shared by tune/benchmarks).
+
+    Interpret-mode measurements pay Python per grid cell, so the default
+    grids are sanity scale; on a TPU backend pass production grids instead.
+    """
+    return (10, 18, 14) if spec.radius == 1 else (12, 26, 18)
+
+
+def plan_key(spec: StencilSpec | str, grid_shape, word_bytes: int = 4,
+             devices_x: int = 1) -> str:
+    """Registry key of one tuning problem (fingerprint lives in the entry)."""
+    name = spec if isinstance(spec, str) else spec.name
+    nz, ny, nx = grid_shape
+    return f"{name}|{nz}x{ny}x{nx}|w{word_bytes}|dx{devices_x}"
+
+
+@dataclasses.dataclass(frozen=True)
+class RegistryEntry:
+    """One tuned plan plus the provenance needed to trust or invalidate it."""
+
+    plan: MWDPlan
+    score: float               # GLUP/s under `source`'s scorer
+    source: str                # "measured" or "model"
+    fingerprint: str           # hw.fingerprint() at tune time
+    evals: int = 0             # plans the search evaluated
+
+    def to_dict(self) -> dict:
+        """JSON-serializable form (inverse of `from_dict`)."""
+        return {"plan": dataclasses.asdict(self.plan), "score": self.score,
+                "source": self.source, "fingerprint": self.fingerprint,
+                "evals": self.evals}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "RegistryEntry":
+        """Rebuild an entry from its JSON form, sanitized.
+
+        Raises on unknown/garbage fields (the caller drops the entry); a
+        kernel-invalid but well-formed plan is clamped by `_sanitize`, so a
+        hand-edited registry file cannot crash a launch.
+        """
+        return cls(plan=_sanitize(MWDPlan(**d["plan"])),
+                   score=float(d["score"]), source=str(d["source"]),
+                   fingerprint=str(d["fingerprint"]),
+                   evals=int(d.get("evals", 0)))
+
+
+def _sanitize(plan: MWDPlan) -> MWDPlan:
+    """Clamp a plan to what the MWD kernel accepts (n_f must divide d_w).
+
+    Raises ValueError for plans no clamping can save (d_w < 1).
+    """
+    if plan.d_w < 1:
+        raise ValueError(f"unusable plan: d_w={plan.d_w}")
+    n_f = min(max(plan.n_f, 1), plan.d_w)
+    while plan.d_w % n_f:
+        n_f -= 1
+    return plan if n_f == plan.n_f else dataclasses.replace(plan, n_f=n_f)
+
+
+class PlanRegistry:
+    """Disk-backed map from tuning problems to tuned `MWDPlan`s.
+
+    Loads eagerly, writes atomically (tmp file + rename), and drops stale
+    entries (fingerprint mismatch) at lookup/save time. A corrupt or
+    version-mismatched file is treated as empty rather than fatal: the
+    registry is a cache, never a source of truth.
+    """
+
+    def __init__(self, path: str | None = None):
+        """Open (or lazily create) the registry file at `path`.
+
+        `path=None` resolves `$REPRO_PLAN_REGISTRY`, falling back to
+        `.repro_cache/plans.json`.
+        """
+        self.path = path or os.environ.get(ENV_VAR) or DEFAULT_PATH
+        self._entries: dict[str, RegistryEntry] = {}
+        self._memo: dict[str, tuple[MWDPlan, str]] = {}  # model fallbacks
+        self._load()
+
+    def _load(self) -> None:
+        try:
+            with open(self.path) as f:
+                raw = json.load(f)
+            if raw.get("version") != SCHEMA_VERSION:
+                return
+            plans = raw.get("plans", {})
+        except (OSError, ValueError, AttributeError):
+            return
+        for key, d in plans.items():
+            try:
+                self._entries[key] = RegistryEntry.from_dict(d)
+            except (ValueError, KeyError, TypeError):
+                continue            # one bad entry must not poison the rest
+
+    def save(self) -> None:
+        """Atomically persist all non-stale entries to `self.path`."""
+        fp = hw.fingerprint()
+        live = {k: e for k, e in self._entries.items() if e.fingerprint == fp}
+        payload = {"version": SCHEMA_VERSION,
+                   "plans": {k: e.to_dict() for k, e in live.items()}}
+        d = os.path.dirname(self.path) or "."
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+        except BaseException:
+            os.unlink(tmp)
+            raise
+
+    def __len__(self) -> int:
+        """Number of entries currently held (including stale ones)."""
+        return len(self._entries)
+
+    def get(self, spec: StencilSpec | str, grid_shape, word_bytes: int = 4,
+            devices_x: int = 1,
+            fingerprint: str | None = None) -> RegistryEntry | None:
+        """Cached entry for the problem, or None on miss / stale fingerprint.
+
+        A stale entry (recorded fingerprint != the current one) is removed
+        from the in-memory map so the next `save()` prunes it from disk.
+        """
+        key = plan_key(spec, grid_shape, word_bytes, devices_x)
+        entry = self._entries.get(key)
+        if entry is None:
+            return None
+        fingerprint = fingerprint or hw.fingerprint()
+        if entry.fingerprint != fingerprint:
+            del self._entries[key]      # stale: tuned on different hardware
+            return None
+        if (isinstance(spec, StencilSpec)
+                and entry.plan.d_w % (2 * spec.radius)):
+            del self._entries[key]      # geometry invalid for this stencil
+            return None
+        return entry
+
+    def put(self, spec: StencilSpec | str, grid_shape, plan: MWDPlan,
+            score: float, *, source: str = "measured", evals: int = 0,
+            word_bytes: int = 4, devices_x: int = 1,
+            fingerprint: str | None = None,
+            persist: bool = True) -> RegistryEntry:
+        """Record a tuned plan and (by default) write the file through."""
+        entry = RegistryEntry(plan=_sanitize(plan), score=score,
+                              source=source,
+                              fingerprint=fingerprint or hw.fingerprint(),
+                              evals=evals)
+        self._entries[plan_key(spec, grid_shape, word_bytes,
+                               devices_x)] = entry
+        if persist:
+            self.save()
+        return entry
+
+    def resolve(self, spec: StencilSpec, grid_shape, word_bytes: int = 4,
+                devices_x: int = 1,
+                chip: hw.ChipSpec = hw.V5E) -> tuple[MWDPlan, str]:
+        """Plan for the problem: registry-first, model-scored fallback.
+
+        Returns `(plan, source)`; source is "registry:measured" or
+        "registry:model" on a cache hit (echoing how the entry was tuned)
+        and "model" for the analytic fallback (memoized per process, not
+        persisted — run `python -m repro.launch.tune` to tune and persist).
+        """
+        entry = self.get(spec, grid_shape, word_bytes, devices_x)
+        if entry is not None:
+            return entry.plan, f"registry:{entry.source}"
+        key = plan_key(spec, grid_shape, word_bytes, devices_x)
+        if key not in self._memo:
+            from repro.core import autotune
+            # cap D_w at the y extent: a diamond wider than the domain only
+            # inflates the launch padding, never the score
+            res = autotune.autotune(spec, grid_shape, devices_x=devices_x,
+                                    chip=chip, word_bytes=word_bytes,
+                                    d_w_cap=grid_shape[1])
+            self._memo[key] = (_sanitize(res.plan), "model")
+        return self._memo[key]
+
+
+_REGISTRIES: dict[str, PlanRegistry] = {}
+
+
+def default_registry() -> PlanRegistry:
+    """Process-wide registry at the default path (one instance per path).
+
+    The path is re-resolved on every call so tests (and multi-tenant
+    drivers) can repoint `$REPRO_PLAN_REGISTRY` mid-process.
+    """
+    path = os.environ.get(ENV_VAR) or DEFAULT_PATH
+    if path not in _REGISTRIES:
+        _REGISTRIES[path] = PlanRegistry(path)
+    return _REGISTRIES[path]
+
+
+def resolve_plan(spec: StencilSpec, grid_shape, word_bytes: int = 4,
+                 devices_x: int = 1,
+                 chip: hw.ChipSpec = hw.V5E) -> tuple[MWDPlan, str]:
+    """Module-level convenience: `default_registry().resolve(...)`."""
+    return default_registry().resolve(spec, grid_shape, word_bytes,
+                                      devices_x, chip)

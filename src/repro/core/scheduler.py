@@ -26,6 +26,7 @@ class TileGraph:
     deps: Mapping[Hashable, Sequence[Hashable]]
 
     def validate(self) -> None:
+        """Raise ValueError if any dependency points outside the graph."""
         for k, ds in self.deps.items():
             for d in ds:
                 if d not in self.deps:
@@ -33,6 +34,7 @@ class TileGraph:
 
 
 def from_diamond_schedule(sched) -> TileGraph:
+    """Tile DAG of a DiamondSchedule, keyed by (row, col)."""
     deps = {}
     for tile in sched.tiles():
         deps[(tile.row, tile.col)] = tuple(sched.dependencies(tile))
@@ -63,6 +65,7 @@ class FifoScheduler:
             return None
 
     def complete(self, key: Hashable) -> None:
+        """Mark `key` done and enqueue dependents it was the last blocker of."""
         with self._lock:
             self._done.add(key)
             for dep in self._dependents.get(key, ()):  # push newly-ready tiles
@@ -72,13 +75,16 @@ class FifoScheduler:
 
     @property
     def finished(self) -> bool:
+        """Whether every tile in the graph has completed."""
         with self._lock:
             return len(self._done) == self._total
 
     def run(self, execute: Callable[[Hashable], None], n_workers: int = 1,
             name: str = "tg") -> list[list[Hashable]]:
-        """Drain the graph with `n_workers` thread groups; returns per-worker
-        execution logs (order of tiles each worker ran)."""
+        """Drain the graph with `n_workers` thread groups.
+
+        Returns per-worker execution logs (order of tiles each worker ran).
+        """
         logs: list[list[Hashable]] = [[] for _ in range(n_workers)]
         errors: list[BaseException] = []
 

@@ -151,6 +151,7 @@ _SWEEPS: dict[str, Callable] = {
 
 
 def sweep_fn(spec: StencilSpec) -> Callable:
+    """The (cur, prev, coeffs) -> new sweep implementing `spec`."""
     return _SWEEPS[spec.name]
 
 

@@ -30,6 +30,8 @@ import numpy as np
 
 @dataclasses.dataclass(frozen=True)
 class DiamondTile:
+    """One diamond clipped to the domain: its per-step y-spans."""
+
     row: int                  # diamond row index r (center time = r*H)
     col: int                  # diamond index along y within the row
     # spans[i] = (t, y_start, y_end) for consecutive time steps
@@ -37,15 +39,18 @@ class DiamondTile:
 
     @property
     def n_lups_per_x(self) -> int:
+        """Lattice updates this tile performs per x-line."""
         return sum(e - s for _, s, e in self.spans)
 
     @property
     def t_range(self) -> tuple[int, int]:
+        """Half-open [t_min, t_max+1) range of time steps with spans."""
         ts = [t for t, _, _ in self.spans]
         return min(ts), max(ts) + 1
 
     @property
     def y_range(self) -> tuple[int, int]:
+        """Half-open y extent the tile ever updates."""
         return (min(s for _, s, _ in self.spans),
                 max(e for _, _, e in self.spans))
 
@@ -63,9 +68,11 @@ class DiamondSchedule:
 
     @property
     def half_height(self) -> int:
+        """H = D_w / 2R: time steps per diamond half."""
         return self.d_w // (2 * self.radius)
 
     def tiles(self) -> Iterator[DiamondTile]:
+        """All tiles, rows in dependency order."""
         for row in self.rows:
             yield from row
 
@@ -88,6 +95,7 @@ class DiamondSchedule:
         return deps
 
     def rows_by_index(self) -> dict[int, tuple[DiamondTile, ...]]:
+        """Map diamond-row index -> that row's tiles."""
         return {row[0].row: row for row in self.rows if row}
 
 
@@ -117,6 +125,7 @@ def _diamond_spans(row: int, col: int, d_w: int, radius: int,
 
 def make_diamond_schedule(d_w: int, radius: int, t_total: int,
                           y_lo: int, y_hi: int) -> DiamondSchedule:
+    """Exact diamond tessellation of [0, t_total) x [y_lo, y_hi)."""
     if d_w % (2 * radius) != 0:
         raise ValueError(f"d_w={d_w} must be a multiple of 2R={2*radius}")
     h = d_w // (2 * radius)
@@ -194,6 +203,7 @@ class CompiledSchedule:
 
     @property
     def n_active(self) -> int:
+        """Number of (row, tile) slots that own at least one span."""
         return int(self.active.sum())
 
 
@@ -277,4 +287,5 @@ class WavefrontPlan:
 
     @property
     def z_working_set(self) -> int:
+        """Live z slabs needed in fast memory for the blocked steps."""
         return self.n_f + self.radius * (self.t_block - 1)

@@ -246,13 +246,22 @@ def extended_coeff_sds(spec: st.StencilSpec, mesh, grid_shape, t_block: int,
 
 def run_distributed(spec: st.StencilSpec, mesh, state, coeffs, n_steps: int,
                     t_block: int = 2, *, hoisted: bool = False,
-                    plan: MWDPlan | None = None):
+                    plan: MWDPlan | str | None = None):
     """Place the problem on the mesh and advance n_steps (super-stepped).
 
     plan: run each super-step as one fused MWD kernel launch per device
-    (see make_super_step) instead of t_block jnp sweeps."""
+    (see make_super_step) instead of t_block jnp sweeps. Pass "auto" to
+    resolve the tuned plan for (spec, global grid, hardware) registry-first
+    from repro.core.registry (model-scored fallback on a miss) — repeat
+    runs after one `python -m repro.launch.tune` skip the search entirely."""
     gs = GridSharding(mesh)
     cur, prev = state
+    if isinstance(plan, str):
+        if plan != "auto":
+            raise ValueError(f"plan must be an MWDPlan or 'auto', got {plan!r}")
+        from repro.core import registry
+        plan, _source = registry.resolve_plan(
+            spec, cur.shape, word_bytes=cur.dtype.itemsize, devices_x=1)
     prev = (jax.device_put(prev, gs.sharding()) if spec.time_order == 2
             else jax.device_put(cur, gs.sharding()))
     cur = jax.device_put(cur, gs.sharding())

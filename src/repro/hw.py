@@ -9,10 +9,13 @@ in the assignment brief.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 
 
 @dataclasses.dataclass(frozen=True)
 class ChipSpec:
+    """Per-chip hardware constants driving every analytic model."""
+
     name: str
     peak_flops_bf16: float      # MXU peak, FLOP/s
     peak_flops_vpu_f32: float   # VPU vector f32 estimate (stencils are VPU work)
@@ -47,3 +50,30 @@ V5E = ChipSpec(
 # Mesh geometry used throughout (see launch/mesh.py).
 POD_SHAPE = (16, 16)          # 256 chips per pod: ('data', 'model')
 MULTI_POD_SHAPE = (2, 16, 16)  # 512 chips: ('pod', 'data', 'model')
+
+
+def fingerprint(chip: ChipSpec = V5E) -> str:
+    """Stable hash of the hardware a tuned plan was measured on.
+
+    The tuned-plan registry (repro.core.registry) keys cached measurements by
+    this value: a plan tuned on one backend (CPU interpret mode, a different
+    TPU generation, a different device count) must not silently be reused on
+    another, so any change here invalidates every cached entry. The hash
+    covers the JAX backend + device kind + device count + jax version and the
+    chip model constants (which parameterize the analytic fallback scores).
+    """
+    import jax
+
+    devs = jax.devices()
+    parts = [
+        jax.__version__,
+        jax.default_backend(),
+        devs[0].device_kind if devs else "none",
+        str(len(devs)),
+        chip.name,
+        # model constants feed the analytic fallback score; retune if they move
+        f"{chip.peak_flops_vpu_f32:.3e}",
+        f"{chip.hbm_bw:.3e}",
+        f"{chip.vmem_bytes}",
+    ]
+    return hashlib.sha1("|".join(parts).encode()).hexdigest()[:16]

@@ -1,3 +1,7 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""TPU Pallas kernels for the stencil hot path, plus their pure-jnp oracles.
+
+`ops` is the public jit'd entry point; `stencil_sweep` / `stencil_fused` /
+`stencil_mwd` are the kernel bodies (spatial blocking, ghost-zone temporal
+blocking, and the paper's multi-threaded wavefront diamond schedule); `ref`
+holds the oracles every kernel is validated against bit-for-bit in tests.
+"""

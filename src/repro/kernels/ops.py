@@ -16,11 +16,33 @@ from functools import partial
 
 import jax
 
+from repro.core.mwd import MWDPlan
 from repro.core.stencils import StencilSpec
 from repro.kernels import ref as _ref
 from repro.kernels import stencil_fused, stencil_mwd, stencil_sweep
 
 ref = _ref
+
+
+def resolve_plan(spec: StencilSpec, state, plan) -> MWDPlan:
+    """Turn `ops.mwd`'s `plan=` argument into a concrete `MWDPlan`.
+
+    `plan` may be an `MWDPlan` (used as-is) or the string "auto", which
+    resolves registry-first against the persistent tuned-plan cache
+    (`repro.core.registry`) keyed by stencil, grid shape, word size, and the
+    hardware fingerprint — falling back to the analytic model-scored
+    auto-tuner on a miss. Single-device launches resolve with devices_x=1.
+    """
+    if isinstance(plan, MWDPlan):
+        return plan
+    if plan != "auto":
+        raise ValueError(f"plan must be an MWDPlan or 'auto', got {plan!r}")
+    from repro.core import registry
+    cur = state[0]
+    word = cur.dtype.itemsize
+    resolved, _source = registry.resolve_plan(spec, cur.shape,
+                                              word_bytes=word, devices_x=1)
+    return resolved
 
 
 def _split_coeffs(spec: StencilSpec, coeffs):
@@ -75,12 +97,22 @@ def _mwd(spec, state, arrays, scalars, n_steps, d_w, n_f, fused):
 
 
 def mwd(spec: StencilSpec, state, coeffs, n_steps: int,
-        d_w: int = 8, n_f: int = 2, fused: bool = True):
+        d_w: int = 8, n_f: int = 2, fused: bool = True,
+        plan: MWDPlan | str | None = None):
     """Paper-faithful multi-threaded wavefront diamond blocking.
 
     fused=True runs the whole compiled schedule in a single pallas_call with
     the parity grids resident in HBM; fused=False launches one pass per
-    diamond row (the legacy mode the auto-tuner compares against)."""
+    diamond row (the legacy mode the auto-tuner compares against).
+
+    plan: overrides (d_w, n_f, fused) with an `MWDPlan`, or "auto" to use
+    the tuned plan for this (stencil, grid, hardware) from the persistent
+    registry — write it with `python -m repro.launch.tune`; misses fall
+    back to the model-scored auto-tuner (no measurement).
+    """
+    if plan is not None:
+        p = resolve_plan(spec, state, plan)
+        d_w, n_f, fused = p.d_w, p.n_f, p.fused
     arrays, scalars = _split_coeffs(spec, coeffs)
     return _mwd(spec, state, arrays, scalars, n_steps, d_w, n_f, fused)
 

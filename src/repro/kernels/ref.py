@@ -16,4 +16,5 @@ def naive_steps(spec: st.StencilSpec, state, coeffs, n_steps: int):
 
 
 def single_sweep(spec: st.StencilSpec, state, coeffs):
+    """One time step with pointer swap: the single-sweep kernels' oracle."""
     return st.step(spec, state, coeffs)

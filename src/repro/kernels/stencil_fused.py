@@ -131,6 +131,7 @@ def fused_pass(spec: st.StencilSpec, state, coeffs, t_block: int, *,
 
 def run_fused(spec: st.StencilSpec, state, coeffs, n_steps: int,
               t_block: int = 4, *, bz: int = 16, by: int = 16):
+    """Advance n_steps in fused T_b-step ghost-zone passes (last may be short)."""
     done = 0
     while done < n_steps:
         tb = min(t_block, n_steps - done)

@@ -101,6 +101,7 @@ def sweep_step(spec: st.StencilSpec, state, coeffs, *, bz: int = 8):
 
 
 def run_sweep(spec: st.StencilSpec, state, coeffs, n_steps: int, *, bz: int = 8):
+    """Advance n_steps as independent z-blocked single-sweep kernel passes."""
     for _ in range(n_steps):
         state = sweep_step(spec, state, coeffs, bz=bz)
     return state

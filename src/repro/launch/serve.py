@@ -2,6 +2,15 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m --reduced \
       --batch 4 --prompt-len 32 --gen 32
+
+Also serves the paper's stencil workload directly: `--stencil 7pt-const`
+runs a request loop where each request advances a resident grid N time
+steps through the MWD kernel, with the plan resolved registry-first from
+the persistent tuned-plan cache (run `python -m repro.launch.tune` once;
+every later server start skips the search):
+
+  PYTHONPATH=src python -m repro.launch.serve --stencil 7pt-const \
+      --requests 8 --steps 4
 """
 
 from __future__ import annotations
@@ -33,15 +42,64 @@ def prefill_into_cache(cfg, params, tokens):
     return logits, cache
 
 
+def serve_stencil(name: str, grid, n_steps: int, n_requests: int):
+    """Stencil-advance serving loop: one warm jitted MWD launch per request.
+
+    The MWD plan is resolved registry-first (repro.core.registry) so a
+    tuned deployment pays zero search/measurement at server start; on a
+    registry miss the model-scored auto-tuner picks the plan analytically.
+    """
+    from repro.core import registry, stencils as stc
+    from repro.kernels import ops
+
+    spec = stc.SPECS[name]
+    grid = grid or registry.default_grid(spec)
+    state, coeffs = stc.make_problem(spec, grid, seed=0)
+    word = state[0].dtype.itemsize
+    plan, source = registry.resolve_plan(spec, grid, word_bytes=word)
+    print(f"serving {name} on {grid}: plan=dw{plan.d_w}.nf{plan.n_f}."
+          f"{'fused' if plan.fused else 'row'} ({source})")
+
+    state = ops.mwd(spec, state, coeffs, n_steps, plan=plan)  # compile/warm
+    jax.block_until_ready(state)
+    lups = float(np.prod(grid)) * n_steps
+    lat = []
+    for _ in range(n_requests):
+        t0 = time.perf_counter()
+        state = ops.mwd(spec, state, coeffs, n_steps, plan=plan)
+        jax.block_until_ready(state)
+        lat.append(time.perf_counter() - t0)
+    lat.sort()
+    p50 = lat[len(lat) // 2]
+    print(f"served {n_requests} requests x {n_steps} steps: "
+          f"p50 {p50*1e3:.1f}ms, max {lat[-1]*1e3:.1f}ms, "
+          f"{lups/p50/1e9:.4f} GLUP/s")
+    return plan, source
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b",
                     choices=list(configs.ARCH_IDS))
+    ap.add_argument("--stencil", default=None, choices=["7pt-const",
+                    "7pt-var", "25pt-const", "25pt-var"],
+                    help="serve stencil advances instead of an LM")
+    ap.add_argument("--grid", type=str, default=None,
+                    help="Z,Y,X stencil grid (default: sanity scale)")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=4,
+                    help="time steps advanced per stencil request")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
     args = ap.parse_args(argv)
+
+    if args.stencil:
+        grid = (tuple(int(x) for x in args.grid.split(",")) if args.grid
+                else None)
+        serve_stencil(args.stencil, grid, args.steps, args.requests)
+        return
 
     cfg = configs.get(args.arch)
     if args.reduced:

@@ -1,0 +1,125 @@
+"""Measured auto-tuning CLI: search once, persist, reuse forever.
+
+Runs the paper's Fig. 7 auto-tuner with REAL measurements — each surviving
+candidate plan compiles and wall-clock-times the actual `ops.mwd` Pallas
+launch (model-pruned first, median-of-k, fused and per-row modes both in the
+search space) — and writes the winner into the persistent plan registry
+(`repro.core.registry`). Consumers (`ops.mwd(plan="auto")`, the distributed
+stepper, `launch.serve --stencil`, `benchmarks/run.py`) resolve plans
+registry-first, so a second invocation for the same (stencil, grid,
+hardware fingerprint) performs ZERO measurements and returns the cache.
+
+  PYTHONPATH=src python -m repro.launch.tune                    # all four
+  PYTHONPATH=src python -m repro.launch.tune --stencil 7pt-const \
+      --grid 12,40,16 --max-evals 12
+  PYTHONPATH=src python -m repro.launch.tune --model-only       # no timing
+
+Output: one `stencil,cached|tuned,plan,score,measurements` row per stencil.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro import hw
+from repro.core import autotune, registry as reg
+from repro.core import stencils as st
+
+
+def tune_one(spec: st.StencilSpec, grid_shape, registry: reg.PlanRegistry, *,
+             word_bytes: int = 4, devices_x: int = 1, measured: bool = True,
+             max_evals: int = 12, reps: int = 3, n_steps: int = 4,
+             force: bool = False) -> dict:
+    """Tune one (stencil, grid) problem registry-first; returns a report.
+
+    On a registry hit (same key, same hardware fingerprint) no measurement
+    runs and the cached plan is returned with `source="cached"`. A measured
+    run only accepts measured entries — a model-only entry for the same key
+    is upgraded by re-tuning, never silently returned. Otherwise the
+    model-pruned search runs — measured wall-clock when `measured`,
+    analytic ECM scores when not — and the winner is persisted.
+    """
+    if not force:
+        entry = registry.get(spec, grid_shape, word_bytes, devices_x)
+        if entry is not None and measured and entry.source != "measured":
+            entry = None            # model-cached: upgrade with measurement
+        if entry is not None:
+            return {"stencil": spec.name, "source": "cached",
+                    "plan": entry.plan, "score": entry.score,
+                    "measurements": 0, "evals": entry.evals, "seconds": 0.0}
+
+    ny = grid_shape[1]
+    t0 = time.perf_counter()
+    if measured:
+        scorer = autotune.measure_score(spec, grid_shape, word_bytes,
+                                        n_steps=n_steps, reps=reps)
+        res = autotune.autotune(spec, grid_shape, devices_x=devices_x,
+                                measure=scorer, word_bytes=word_bytes,
+                                max_evals=max_evals, d_w_cap=ny)
+        n_meas, source = scorer.measurements, "measured"
+    else:
+        res = autotune.autotune(spec, grid_shape, devices_x=devices_x,
+                                word_bytes=word_bytes, max_evals=max_evals,
+                                d_w_cap=ny)
+        n_meas, source = 0, "model"
+    registry.put(spec, grid_shape, res.plan, res.score, source=source,
+                 evals=len(res.evaluated), word_bytes=word_bytes,
+                 devices_x=devices_x)
+    return {"stencil": spec.name, "source": source, "plan": res.plan,
+            "score": res.score, "measurements": n_meas,
+            "evals": len(res.evaluated),
+            "seconds": time.perf_counter() - t0}
+
+
+def main(argv=None) -> list[dict]:
+    """CLI entry point; returns the per-stencil reports (tested directly)."""
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.tune",
+        description="Measured MWD auto-tuning with a persistent registry")
+    ap.add_argument("--stencil", action="append", choices=list(st.SPECS),
+                    help="stencil(s) to tune (default: all four)")
+    ap.add_argument("--grid", type=str, default=None,
+                    help="Z,Y,X grid (default: per-stencil sanity scale)")
+    ap.add_argument("--word-bytes", type=int, default=4)
+    ap.add_argument("--devices-x", type=int, default=1)
+    ap.add_argument("--registry", type=str, default=None,
+                    help=f"registry path (default ${reg.ENV_VAR} or "
+                         f"{reg.DEFAULT_PATH})")
+    ap.add_argument("--model-only", action="store_true",
+                    help="score analytically, no wall-clock measurement")
+    ap.add_argument("--max-evals", type=int, default=12)
+    ap.add_argument("--reps", type=int, default=3,
+                    help="timed launches per measured candidate (median)")
+    ap.add_argument("--steps", type=int, default=4,
+                    help="time steps each measured launch advances")
+    ap.add_argument("--force", action="store_true",
+                    help="re-tune even on a registry hit")
+    args = ap.parse_args(argv)
+
+    registry = (reg.PlanRegistry(args.registry) if args.registry
+                else reg.default_registry())
+    specs = [st.SPECS[n] for n in (args.stencil or st.SPECS)]
+    grid = (tuple(int(x) for x in args.grid.split(",")) if args.grid
+            else None)
+
+    print(f"# registry={registry.path} fingerprint={hw.fingerprint()}")
+    print("stencil,source,plan,score_GLUPs,measurements,evals,seconds")
+    reports = []
+    for spec in specs:
+        g = grid or reg.default_grid(spec)
+        r = tune_one(spec, g, registry, word_bytes=args.word_bytes,
+                     devices_x=args.devices_x, measured=not args.model_only,
+                     max_evals=args.max_evals, reps=args.reps,
+                     n_steps=args.steps, force=args.force)
+        p = r["plan"]
+        print(f"{r['stencil']},{r['source']},"
+              f"dw{p.d_w}.nf{p.n_f}.tg{p.tg_x}.{'fused' if p.fused else 'row'},"
+              f"{r['score']:.3f},{r['measurements']},{r['evals']},"
+              f"{r['seconds']:.1f}")
+        reports.append(r)
+    return reports
+
+
+if __name__ == "__main__":
+    main()
