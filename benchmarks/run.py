@@ -19,6 +19,10 @@ no TPU). Figure mapping:
                       tuned >= default for all four paper stencils)
   smoke               CI gate: tiny-grid interpret-mode correctness +
                       traffic sanity, asserts on regression
+  custom_stencil      CI gate for the stencil IR: a user-defined
+                      variable-coefficient 19-pt box op (not among the
+                      paper's four) through naive / fused MWD / plan="auto",
+                      asserts the generated pipeline matches the oracle
   lm_substrate        microbenches of the LM substrate layers
 """
 
@@ -33,9 +37,36 @@ import numpy as np
 
 from benchmarks import traffic
 from repro import hw
-from repro.core import autotune, models, mwd, registry, stencils as st
+from repro.core import autotune, ir, models, mwd, registry, stencils as st
 from repro.core.mwd import MWDPlan
 from repro.kernels import ops
+
+
+def _custom_box_op() -> ir.StencilOp:
+    # A user-defined operator that is NOT among the paper's four: a 19-point
+    # variable-coefficient box (center + 6 faces + 12 edges), symmetric pairs
+    # sharing one coefficient stream each -> 10 streams, 28 FLOPs/LUP derived.
+    taps = [ir.Tap(0, 0, 0, ir.array(0))]
+    k = 1
+    for ax in range(3):                      # 6 faces -> 3 symmetric pairs
+        o = [0, 0, 0]
+        o[ax] = 1
+        taps += [ir.Tap(*o, ir.array(k)),
+                 ir.Tap(*[-v for v in o], ir.array(k))]
+        k += 1
+    for a in range(3):                       # 12 edges -> 6 symmetric pairs
+        for b in range(a + 1, 3):
+            for sb in (1, -1):
+                o = [0, 0, 0]
+                o[a], o[b] = 1, sb
+                taps += [ir.Tap(*o, ir.array(k)),
+                         ir.Tap(*[-v for v in o], ir.array(k))]
+                k += 1
+    return ir.register(ir.StencilOp("box19-var", tuple(taps),
+                                    coeff_scale=0.05))
+
+
+CUSTOM_BOX = _custom_box_op()
 
 
 def _t(fn, *args, reps=3, **kw):
@@ -252,6 +283,37 @@ def smoke():
          f"score={res.score:.1f}")
 
 
+def custom_stencil():
+    """CI gate: a user-defined op flows end-to-end with zero kernel edits.
+
+    Pushes `CUSTOM_BOX` (variable-coefficient 19-pt box) through the fused
+    single-launch MWD kernel and the registry-first plan="auto" path, and
+    asserts both match the naive oracle; also reports the IR-derived
+    analytics and the exact fused-vs-row DMA accounting for the custom op.
+    """
+    spec = CUSTOM_BOX
+    shape, t_steps, d_w, n_f = (8, 14, 12), 3, 4, 2
+    state, coeffs = st.make_problem(spec, shape, seed=0)
+    want = st.run_naive(spec, state, coeffs, t_steps)
+    us = _t(lambda: jax.block_until_ready(
+        ops.mwd(spec, state, coeffs, t_steps, d_w=d_w, n_f=n_f, fused=True)),
+        reps=1)
+    got = ops.mwd(spec, state, coeffs, t_steps, d_w=d_w, n_f=n_f, fused=True)
+    err = float(jnp.max(jnp.abs(want[0] - got[0])))
+    assert err < 1e-4, f"custom op fused MWD != naive oracle: {err}"
+    auto = ops.mwd(spec, state, coeffs, t_steps, plan="auto")
+    err_auto = float(jnp.max(jnp.abs(want[0] - auto[0])))
+    assert err_auto < 1e-4, f"custom op plan='auto' != naive oracle: {err_auto}"
+    tf = traffic.mwd_run_traffic(spec, shape, t_steps, d_w, n_f, fused=True)
+    tr = traffic.mwd_run_traffic(spec, shape, t_steps, d_w, n_f, fused=False)
+    assert tf["bytes"] < tr["bytes"]
+    _row(f"custom.{spec.name}", us,
+         f"flops={spec.flops_per_lup};streams={spec.n_streams};"
+         f"fingerprint={spec.fingerprint};err_fused={err:.1e};"
+         f"err_auto={err_auto:.1e};fused_MB={tf['bytes']/1e6:.2f};"
+         f"row_MB={tr['bytes']/1e6:.2f}")
+
+
 def lm_substrate():
     from repro import configs
     from repro.models import lm
@@ -281,6 +343,7 @@ BENCHES = {
     "fused_vs_row": fused_vs_row,
     "tuned_vs_default": tuned_vs_default,
     "smoke": smoke,
+    "custom_stencil": custom_stencil,
     "lm_substrate": lm_substrate,
 }
 

@@ -66,8 +66,11 @@ def ghostzone_pass_traffic(spec: StencilSpec, grid_shape, t_block: int,
     nyp = -(-ny // by) * by
     nxp = nx + 2 * g
     n_blocks = (nzp // bz) * (nyp // by)
-    n_in = 1 + (2 if spec.time_order == 2 else 0) + \
-        (spec.n_coeff_arrays if spec.time_order == 1 else 0)
+    # streamed windows, IR-derived: cur (+ prev for 2nd order) + every
+    # stacked coefficient stream (same count for all four paper ops as the
+    # old per-time-order formula, but also right for custom 2nd-order ops
+    # with several coefficient arrays)
+    n_in = 1 + (1 if spec.time_order == 2 else 0) + spec.n_coeff_arrays
     in_bytes = n_blocks * n_in * (bz + 2 * g) * (by + 2 * g) * nxp * word
     out_bytes = n_blocks * 2 * bz * by * nxp * word
     lups = nz * ny * nx * t_block
@@ -81,8 +84,7 @@ def spatial_pass_traffic(spec: StencilSpec, grid_shape, bz: int,
     r = spec.radius
     nzp = -(-nz // bz) * bz
     nyp, nxp = ny + 2 * r, nx + 2 * r
-    n_in = 1 + (2 if spec.time_order == 2 else 0) + \
-        (spec.n_coeff_arrays if spec.time_order == 1 else 0)
+    n_in = 1 + (1 if spec.time_order == 2 else 0) + spec.n_coeff_arrays
     in_bytes = (nzp // bz) * n_in * (bz + 2 * r) * nyp * nxp * word
     out_bytes = nzp * nyp * nxp * word
     lups = nz * ny * nx

@@ -2,7 +2,11 @@
 
 Layering (each module is pure and importable on its own):
 
-* `stencils`  — the four corner-case stencil operators (Listings 1-4)
+* `ir`        — declarative StencilOp IR: taps -> generated sweep, derived
+  analytics (FLOPs/streams/radii/code balance), coefficient split, stable
+  structural fingerprints, user-operator registry
+* `stencils`  — the four corner-case operators as IR instances + step API
+* `listings`  — hand-written Listings 1-4, retained as bitwise references
 * `tiling`    — diamond + wavefront space-time tessellation and the
   schedule compiler that flattens it into dense launch tables
 * `mwd`       — the MWD executor (semantic oracle for the Pallas kernels)

@@ -1,0 +1,461 @@
+"""Declarative stencil IR: one operator description drives every layer.
+
+A `StencilOp` is a list of taps ``(dz, dy, dx, coeff)`` — each tap reads the
+current solution at a constant offset and weights it by a coefficient source —
+plus the time order of the update.  A coefficient source is either
+
+* ``const(j)``  — a compile-time scalar (slot ``j`` of the scalar tuple; the
+  kernels bake these in as immediates, exactly like the paper's codes), or
+* ``array(k)``  — a per-cell variable coefficient (slot ``k`` of one stacked
+  ``(A, Nz, Ny, Nx)`` stream; the paper's variable-coefficient operators).
+
+``time_order == 2`` selects the wave-equation recurrence
+``U = 2*V - U_prev + scale * L(V)`` where ``L`` is the tap sum and ``scale``
+is an optional extra coefficient source (the 25pt-const velocity array ``C``).
+
+Everything that used to be hand-maintained per stencil is *derived* here:
+
+* the JAX sweep function (`make_sweep`: generated shifted-slice expression,
+  bitwise-equal to the paper listings in `repro.core.listings`),
+* the analytics feeding `models`/`traffic` (`flops_per_lup`, `n_streams`,
+  per-axis radius, spatial code balance),
+* the coefficient split/join used by the kernels and the distributed stepper
+  (`split_coeffs`/`join_coeffs`: one canonical ``(arrays, scalars)`` form),
+* a stable structural `fingerprint` that keys the tuned-plan registry, so
+  two different operators sharing a name can never collide in the cache.
+
+The four paper stencils (Listings 1-4) are `OPS` instances of this IR; any
+user-defined operator registered via `register` (or referenced as
+``"module.path:ATTR"``) flows through the same sweeps, kernels, auto-tuner,
+registry, and distributed stepper with zero kernel edits.
+
+Derivation conventions (documented because tests pin them to the paper):
+
+* FLOPs/LUP counts one multiply per coefficient group (taps sharing one
+  coefficient source — the paper's axis-symmetry optimization), one add per
+  remaining tap and per group-combine, plus the 4 ops of the 2nd-order
+  recurrence (3 when `scale` is None).  Matching the paper's Table 1, a
+  first-order operator whose coefficients are all compile-time constants is
+  counted with one group-accumulate retired as a fused multiply-add (the
+  7pt-const stencil's published 7 FLOPs = 2 mul + 5 add); variable-coefficient
+  and 2nd-order operators are counted un-fused (13/33/37).
+* N_D (read streams incl. write-allocate) = 2 + n_coeff_arrays for *both*
+  time orders, for two different reasons: 1st order reads cur + coeffs and
+  pays an RFO on the separate destination; 2nd order reads cur + prev +
+  coeffs and pays no RFO because the destination *is* the prev buffer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import hashlib
+import importlib
+
+
+@dataclasses.dataclass(frozen=True)
+class Coeff:
+    """One coefficient source: compile-time scalar slot or per-cell array slot."""
+
+    kind: str                   # "const" | "array"
+    index: int                  # slot in the scalar tuple / stacked array
+
+    def __post_init__(self):
+        if self.kind not in ("const", "array"):
+            raise ValueError(f"coeff kind must be const|array, got {self.kind!r}")
+        if self.index < 0:
+            raise ValueError(f"coeff index must be >= 0, got {self.index}")
+
+    def describe(self) -> str:
+        """Canonical short form, e.g. ``c0`` / ``a3`` (used by fingerprint)."""
+        return ("c" if self.kind == "const" else "a") + str(self.index)
+
+
+def const(index: int) -> Coeff:
+    """Compile-time scalar coefficient, slot `index` of the scalar tuple."""
+    return Coeff("const", index)
+
+
+def array(index: int) -> Coeff:
+    """Per-cell variable coefficient, slot `index` of the stacked stream."""
+    return Coeff("array", index)
+
+
+@dataclasses.dataclass(frozen=True)
+class Tap:
+    """One stencil tap: read cur at (dz, dy, dx), weight by `coeff`."""
+
+    dz: int
+    dy: int
+    dx: int
+    coeff: Coeff
+
+    @property
+    def offset(self) -> tuple[int, int, int]:
+        """The (dz, dy, dx) displacement of this tap."""
+        return (self.dz, self.dy, self.dx)
+
+
+@dataclasses.dataclass(frozen=True)
+class StencilOp:
+    """Declarative stencil operator: taps + time order; everything else derives.
+
+    `default_scalars` / `coeff_scale` are problem-generation hints consumed by
+    `make_problem` (magnitudes keeping the test problems numerically tame);
+    they are NOT part of the semantic `fingerprint`.
+    """
+
+    name: str
+    taps: tuple[Tap, ...]
+    time_order: int = 1
+    scale: Coeff | None = None              # 2nd-order extra multiplier (C)
+    default_scalars: tuple[float, ...] | None = None
+    coeff_scale: float = 0.1
+
+    def __post_init__(self):
+        object.__setattr__(self, "taps", tuple(self.taps))
+        if self.default_scalars is not None:
+            object.__setattr__(self, "default_scalars",
+                               tuple(float(x) for x in self.default_scalars))
+        if not self.taps:
+            raise ValueError(f"{self.name}: an operator needs at least one tap")
+        if self.time_order not in (1, 2):
+            raise ValueError(f"{self.name}: time_order must be 1 or 2")
+        if self.scale is not None and self.time_order != 2:
+            raise ValueError(f"{self.name}: scale is only meaningful for "
+                             "2nd-order-in-time operators")
+        offs = [t.offset for t in self.taps]
+        if len(set(offs)) != len(offs):
+            raise ValueError(f"{self.name}: duplicate tap offsets")
+        if self.radius < 1:
+            raise ValueError(f"{self.name}: at least one tap must be off-center")
+        for kind, n in (("const", self.n_scalars), ("array",
+                                                    self.n_coeff_arrays)):
+            used = {c.index for c in self._coeffs() if c.kind == kind}
+            if used != set(range(n)):
+                raise ValueError(f"{self.name}: {kind} slots must be "
+                                 f"contiguous from 0, got {sorted(used)}")
+
+    def _coeffs(self):
+        cs = [t.coeff for t in self.taps]
+        if self.scale is not None:
+            cs.append(self.scale)
+        return cs
+
+    # -- derived geometry ---------------------------------------------------
+
+    @property
+    def radii(self) -> tuple[int, int, int]:
+        """Per-axis halo depth (max |offset| along z, y, x)."""
+        return (max(abs(t.dz) for t in self.taps),
+                max(abs(t.dy) for t in self.taps),
+                max(abs(t.dx) for t in self.taps))
+
+    @property
+    def radius(self) -> int:
+        """Semi-bandwidth R: the kernels pad/halo all axes to the max radius."""
+        return max(max(abs(t.dz), abs(t.dy), abs(t.dx)) for t in self.taps)
+
+    # -- derived coefficient layout -----------------------------------------
+
+    @property
+    def n_scalars(self) -> int:
+        """Number of compile-time scalar coefficient slots."""
+        return 1 + max((c.index for c in self._coeffs() if c.kind == "const"),
+                       default=-1)
+
+    @property
+    def n_coeff_arrays(self) -> int:
+        """Number of domain-sized coefficient streams (stacked array slots)."""
+        return 1 + max((c.index for c in self._coeffs() if c.kind == "array"),
+                       default=-1)
+
+    @property
+    def groups(self) -> tuple[tuple[Coeff, tuple[Tap, ...]], ...]:
+        """Taps grouped by coefficient source, in first-appearance order.
+
+        This is the paper's symmetry structure (one multiply per group, the
+        group's taps pre-summed) and the exact evaluation order of the
+        generated sweep — which is what makes it bitwise-reproducible.
+        """
+        order: list[Coeff] = []
+        members: dict[Coeff, list[Tap]] = {}
+        for t in self.taps:
+            if t.coeff not in members:
+                order.append(t.coeff)
+                members[t.coeff] = []
+            members[t.coeff].append(t)
+        return tuple((c, tuple(members[c])) for c in order)
+
+    # -- derived analytics (feed models.py / traffic.py) --------------------
+
+    @property
+    def flops_per_lup(self) -> int:
+        """FLOPs per lattice update, counted as in the paper's Table 1."""
+        n_groups = len(self.groups)
+        flops = len(self.taps) + n_groups - 1       # group adds + one mul each
+        if self.time_order == 2:
+            # U = 2*V - U_prev [+ scale * L]: mul, sub, add (+ scale mul)
+            flops += 3 if self.scale is None else 4
+        elif n_groups >= 2 and all(c.kind == "const" for c, _ in self.groups):
+            flops -= 1      # all-constant 1st-order: one accumulate is an FMA
+        return flops
+
+    @property
+    def n_streams(self) -> int:
+        """N_D of Eqs. 4-5: read streams incl. the destination write-allocate."""
+        return 2 + self.n_coeff_arrays
+
+    @property
+    def bytes_per_cell(self) -> int:
+        """Domain-sized arrays touched per cell (solution levels + coeffs)."""
+        return 2 + self.n_coeff_arrays
+
+    def spatial_code_balance(self, word_bytes: int = 8) -> float:
+        """Optimal spatial-blocking code balance, bytes/LUP (paper Sec. 5.2).
+
+        = word * (N_D + 1): all read streams + the store.
+        (24 / 80 / 32 / 128 B/LUP at double precision for the paper's four.)
+        """
+        return word_bytes * (self.n_streams + 1)
+
+    # -- identity -----------------------------------------------------------
+
+    @property
+    def fingerprint(self) -> str:
+        """Stable hash of the operator *semantics* (taps, time order, scale).
+
+        Registry plan keys embed this so two user-defined ops sharing a name
+        cannot collide in the plan cache.  Problem-generation hints
+        (`default_scalars`, `coeff_scale`) and the display name are excluded.
+        """
+        parts = [f"to{self.time_order}",
+                 "s:" + (self.scale.describe() if self.scale else "-")]
+        parts += [f"{t.dz},{t.dy},{t.dx},{t.coeff.describe()}"
+                  for t in self.taps]
+        return hashlib.sha256("|".join(parts).encode()).hexdigest()[:12]
+
+
+# ---------------------------------------------------------------------------
+# Generated sweep (replaces the four hand-written bodies)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def make_sweep(op: StencilOp):
+    """Generate the JAX sweep for `op`: ``(cur, prev, arrays, scalars) -> new``.
+
+    The generated expression follows `op.groups` exactly: per group, the taps
+    are summed left-associatively in listed order, multiplied once by the
+    group coefficient, and accumulated across groups in first-appearance
+    order; a 2nd-order op wraps the accumulation as
+    ``2*V - prev [+ scale * acc]``.  For the four paper operators this is
+    bitwise-equal to the hand-written listings (`repro.core.listings`),
+    which the property tests in tests/test_ir.py pin.
+
+    `arrays` is the stacked ``(A, ...)`` coefficient stream (or None when the
+    op has no array coefficients); `scalars` is indexable by slot (a tuple of
+    floats/traced scalars, or a 1-D array).  The update writes the interior
+    ``[R:-R]`` of every axis and carries the Dirichlet frame through.
+    """
+    r = op.radius
+
+    def _core(a):
+        return a[r:-r, r:-r, r:-r]
+
+    def _shift(a, off):
+        idx = tuple(slice(r + d, a.shape[ax] - r + d or None)
+                    for ax, d in enumerate(off))
+        return a[idx]
+
+    def sweep(cur, prev, arrays, scalars):
+        def cval(c: Coeff):
+            if c.kind == "const":
+                return scalars[c.index]
+            return _core(arrays[c.index])
+
+        acc = None
+        for coeff, taps in op.groups:
+            s = None
+            for t in taps:
+                v = _shift(cur, t.offset)
+                s = v if s is None else s + v
+            term = cval(coeff) * s
+            acc = term if acc is None else acc + term
+        if op.time_order == 2:
+            lead = 2.0 * _core(cur) - _core(prev)
+            acc = lead + (cval(op.scale) * acc if op.scale is not None
+                          else acc)
+        return cur.at[r:-r, r:-r, r:-r].set(acc)
+
+    return sweep
+
+
+# ---------------------------------------------------------------------------
+# Coefficient packing: one canonical split everywhere
+# ---------------------------------------------------------------------------
+
+def split_coeffs(op: StencilOp, coeffs):
+    """Packed (public) coefficients -> canonical ``(arrays, scalars)``.
+
+    arrays: stacked ``(A, Nz, Ny, Nx)`` stream or None; scalars: tuple.
+    The packed convention is derived from the op's slot counts:
+    scalars-only ops pass a tuple, arrays-only ops pass the stacked stream,
+    mixed ops pass ``(arrays, scalars)`` (a bare 3-D array is accepted for
+    A == 1, the legacy 25pt-const form).
+    """
+    n_arr, n_sca = op.n_coeff_arrays, op.n_scalars
+    if n_arr and n_sca:
+        arrays, scalars = coeffs
+    elif n_arr:
+        arrays, scalars = coeffs, ()
+    else:
+        arrays, scalars = None, coeffs
+    if arrays is not None and arrays.ndim == 3:
+        arrays = arrays[None]
+    if arrays is not None and arrays.shape[0] != n_arr:
+        raise ValueError(f"{op.name}: expected {n_arr} coefficient streams, "
+                         f"got {arrays.shape[0]}")
+    scalars = tuple(scalars)
+    if len(scalars) != n_sca:
+        raise ValueError(f"{op.name}: expected {n_sca} scalar coefficients, "
+                         f"got {len(scalars)}")
+    return arrays, scalars
+
+
+def join_coeffs(op: StencilOp, arrays, scalars):
+    """Canonical ``(arrays, scalars)`` -> the op's packed convention."""
+    if op.n_coeff_arrays and op.n_scalars:
+        return (arrays, scalars)
+    return arrays if op.n_coeff_arrays else tuple(scalars)
+
+
+def make_problem(op: StencilOp, shape, dtype=None, seed: int = 0):
+    """Random initial state + coefficients for `op` on grid `shape` (z,y,x).
+
+    Scalar coefficients come from `op.default_scalars` (falling back to a
+    tame geometric-ish series) and array streams are
+    ``op.coeff_scale * N(0,1)``; the draw order (cur, prev, arrays) is fixed
+    so a given (op, shape, seed) is reproducible.
+    """
+    import jax.numpy as jnp
+    import numpy as np
+
+    if dtype is None:
+        dtype = jnp.float32
+    rng = np.random.default_rng(seed)
+    nz, ny, nx = shape
+
+    def arr(*s):
+        return jnp.asarray(rng.standard_normal(s), dtype=dtype)
+
+    cur = arr(nz, ny, nx)
+    prev = arr(nz, ny, nx) if op.time_order == 2 else cur
+    arrays = None
+    if op.n_coeff_arrays:
+        arrays = op.coeff_scale * arr(op.n_coeff_arrays, nz, ny, nx)
+    svals = op.default_scalars
+    if svals is None:
+        svals = tuple(0.1 / (j + 1) for j in range(op.n_scalars))
+    if op.n_coeff_arrays and op.n_scalars:
+        scalars = jnp.asarray(svals, dtype)
+    else:
+        scalars = tuple(jnp.asarray(v, dtype) for v in svals)
+    return (cur, prev), join_coeffs(op, arrays, scalars)
+
+
+# ---------------------------------------------------------------------------
+# The paper's four corner-case operators (Listings 1-4) as IR instances
+# ---------------------------------------------------------------------------
+
+def _off(axis: int, d: int) -> tuple[int, int, int]:
+    o = [0, 0, 0]
+    o[axis] = d
+    return tuple(o)
+
+
+def _paper_7pt_const() -> StencilOp:
+    taps = [Tap(0, 0, 0, const(0))]
+    taps += [Tap(*_off(ax, o), const(1)) for ax in range(3) for o in (-1, 1)]
+    return StencilOp("7pt-const", tuple(taps), default_scalars=(0.4, 0.1))
+
+
+def _paper_7pt_var() -> StencilOp:
+    taps = [Tap(0, 0, 0, array(0))]
+    k = 1
+    for ax in range(3):
+        for o in (-1, 1):
+            taps.append(Tap(*_off(ax, o), array(k)))
+            k += 1
+    return StencilOp("7pt-var", tuple(taps), coeff_scale=0.1)
+
+
+def _paper_25pt_const() -> StencilOp:
+    taps = [Tap(0, 0, 0, const(0))]
+    for d in range(1, 5):
+        taps += [Tap(*_off(ax, o * d), const(d))
+                 for ax in range(3) for o in (-1, 1)]
+    return StencilOp("25pt-const", tuple(taps), time_order=2, scale=array(0),
+                     default_scalars=(0.1, 0.06, 0.045, 0.03, 0.015),
+                     coeff_scale=0.1)
+
+
+def _paper_25pt_var() -> StencilOp:
+    taps = [Tap(0, 0, 0, array(0))]
+    for ax in range(3):
+        for d in range(1, 5):
+            c = array(1 + ax * 4 + (d - 1))
+            taps += [Tap(*_off(ax, d), c), Tap(*_off(ax, -d), c)]
+    return StencilOp("25pt-var", tuple(taps), coeff_scale=0.02)
+
+
+OPS: dict[str, StencilOp] = {op.name: op for op in (
+    _paper_7pt_const(), _paper_7pt_var(),
+    _paper_25pt_const(), _paper_25pt_var())}
+
+
+# ---------------------------------------------------------------------------
+# User-operator registry (launch CLIs / benchmarks resolve through this)
+# ---------------------------------------------------------------------------
+
+_USER_OPS: dict[str, StencilOp] = {}
+
+
+def register(op: StencilOp) -> StencilOp:
+    """Register a user-defined operator so CLIs can resolve it by name.
+
+    Paper operator names cannot be shadowed: registering under a built-in
+    name is an error unless the op is structurally identical (re-registering
+    the same op is a no-op) — `resolve_op` always prefers `OPS` anyway.
+    """
+    if not isinstance(op, StencilOp):
+        raise TypeError(f"register() wants a StencilOp, got {type(op)}")
+    builtin = OPS.get(op.name)
+    if builtin is not None and builtin.fingerprint != op.fingerprint:
+        raise ValueError(f"cannot register {op.name!r}: shadows the paper "
+                         "operator of that name with different structure")
+    _USER_OPS[op.name] = op
+    return op
+
+
+def available() -> list[str]:
+    """Names resolvable by `resolve_op` (paper ops + registered user ops)."""
+    return sorted({**OPS, **_USER_OPS})
+
+
+def resolve_op(ref) -> StencilOp:
+    """Resolve an operator reference: a StencilOp, a (registered) name, or a
+    ``"module.path:ATTR"`` import reference (imported and auto-registered)."""
+    if isinstance(ref, StencilOp):
+        return ref
+    if ref in OPS:              # built-ins always win over registrations
+        return OPS[ref]
+    if ref in _USER_OPS:
+        return _USER_OPS[ref]
+    if ":" in str(ref):
+        mod_name, attr = str(ref).split(":", 1)
+        op = getattr(importlib.import_module(mod_name), attr)
+        if not isinstance(op, StencilOp):
+            raise TypeError(f"{ref} is not a StencilOp")
+        return register(op)
+    raise KeyError(f"unknown stencil {ref!r}; known: {available()} "
+                   "(or pass module.path:ATTR)")

@@ -1,0 +1,89 @@
+"""The paper's Listings 1-4, transcribed by hand and retained verbatim.
+
+These are NOT dispatched anywhere in the framework — every execution path
+runs the sweep *generated* from the declarative IR (`repro.core.ir`).  They
+exist as independent references: tests/test_ir.py property-checks that the
+generated sweeps are bitwise-equal to these hand transcriptions on random
+grids, which pins the code generator to the paper's exact operation order.
+
+Each function keeps its original per-listing coefficient convention:
+``sweep_7pt_const(cur, prev, (c0, c1))``, ``sweep_7pt_var(cur, prev, c7)``,
+``sweep_25pt_const(cur, prev, (C, c5))``, ``sweep_25pt_var(cur, prev, c13)``.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def _core(a: jax.Array, r: int) -> jax.Array:
+    return a[r:-r, r:-r, r:-r]
+
+
+def _shift(a: jax.Array, r: int, axis: int, off: int) -> jax.Array:
+    """Core-sized view of `a` displaced by `off` along `axis` (|off| <= r)."""
+    idx = []
+    for ax in range(3):
+        d = off if ax == axis else 0
+        idx.append(slice(r + d, a.shape[ax] - r + d or None))
+    return a[tuple(idx)]
+
+
+def sweep_7pt_const(cur, prev, coeffs):
+    """Listing 1: U = c0*V + c1*(6 axis neighbors). coeffs = (c0, c1) scalars."""
+    del prev
+    c0, c1 = coeffs
+    r = 1
+    acc = sum(_shift(cur, r, ax, o) for ax in range(3) for o in (-1, 1))
+    out_core = c0 * _core(cur, r) + c1 * acc
+    return cur.at[r:-r, r:-r, r:-r].set(out_core)
+
+
+def sweep_7pt_var(cur, prev, coeffs):
+    """Listing 2: per-direction coefficient arrays, no symmetry.
+
+    coeffs: array (7, Nz, Ny, Nx): [center, z-, z+, y-, y+, x-, x+].
+    """
+    del prev
+    r = 1
+    c = coeffs
+    out_core = _core(c[0], r) * _core(cur, r)
+    k = 1
+    for ax in range(3):
+        for o in (-1, 1):
+            out_core = out_core + _core(c[k], r) * _shift(cur, r, ax, o)
+            k += 1
+    return cur.at[r:-r, r:-r, r:-r].set(out_core)
+
+
+def sweep_25pt_const(cur, prev, coeffs):
+    """Listing 3: 2nd-order-in-time wave equation, R=4, axis symmetry.
+
+    coeffs = (C, c) with C a domain-sized array and c = (c0..c4) scalars.
+    U_new = 2*V - U + C * [c0*V + sum_r c_r * (6 neighbors at distance r)].
+    """
+    C, c = coeffs
+    r = 4
+    lap = c[0] * _core(cur, r)
+    for d in range(1, 5):
+        acc = sum(_shift(cur, r, ax, o * d) for ax in range(3) for o in (-1, 1))
+        lap = lap + c[d] * acc
+    out_core = 2.0 * _core(cur, r) - _core(prev, r) + _core(C, r) * lap
+    return cur.at[r:-r, r:-r, r:-r].set(out_core)
+
+
+def sweep_25pt_var(cur, prev, coeffs):
+    """Listing 4: R=4, variable anisotropic coefficients, axis symmetry.
+
+    coeffs: array (13, Nz, Ny, Nx): [center] + [axis 0..2][dist 1..4].
+    """
+    del prev
+    r = 4
+    c = coeffs
+    out_core = _core(c[0], r) * _core(cur, r)
+    for ax in range(3):
+        for d in range(1, 5):
+            w = _core(c[1 + ax * 4 + (d - 1)], r)
+            out_core = out_core + w * (_shift(cur, r, ax, d) +
+                                       _shift(cur, r, ax, -d))
+    return cur.at[r:-r, r:-r, r:-r].set(out_core)

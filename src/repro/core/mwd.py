@@ -24,6 +24,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core import ir
 from repro.core import stencils as st
 from repro.core import tiling
 
@@ -52,24 +53,24 @@ class MWDPlan:
                                     n_f=self.n_f, t_block=t_b)
 
 
-@partial(jax.jit, static_argnames=("spec", "y0", "y1", "t_parity"))
-def _span_update(spec: st.StencilSpec, buf0, buf1, coeffs,
+@partial(jax.jit, static_argnames=("spec", "scalars", "y0", "y1", "t_parity"))
+def _span_update(spec: st.StencilSpec, buf0, buf1, arrays, scalars,
                  y0: int, y1: int, t_parity: int):
-    """Update rows [y0, y1) one step; returns the written buffer's new value."""
+    """Update rows [y0, y1) one step; returns the written buffer's new value.
+
+    `arrays`/`scalars` are the canonical coefficient split (`ir.split_coeffs`)
+    with the scalars static (inlined as constants, exactly like the Pallas
+    kernels — which keeps this oracle bitwise-comparable to them);
+    2nd-order-in-time handling is entirely `spec.time_order`-driven — the
+    parity buffer being overwritten doubles as the t-1 level the generated
+    sweep reads.
+    """
     r = spec.radius
     cur = (buf0, buf1)[t_parity]
     dst = (buf0, buf1)[1 - t_parity]
     sl = (slice(None), slice(y0 - r, y1 + r), slice(None))
-    sub_cur = cur[sl]
-    sub_prev = dst[sl]
-    if spec.name == "25pt-const":
-        c_arr, c_vec = coeffs
-        sub_coeffs = (c_arr[sl], c_vec)
-    elif spec.n_coeff_arrays > 0:
-        sub_coeffs = coeffs[(slice(None),) + sl]
-    else:
-        sub_coeffs = coeffs
-    new_sub = st.sweep_fn(spec)(sub_cur, sub_prev, sub_coeffs)
+    sub_arrays = arrays[(slice(None),) + sl] if arrays is not None else None
+    new_sub = ir.make_sweep(spec)(cur[sl], dst[sl], sub_arrays, scalars)
     return dst.at[:, y0:y1, :].set(new_sub[:, r:-r, :])
 
 
@@ -88,14 +89,16 @@ def run_mwd(spec: st.StencilSpec, state, coeffs, n_steps: int,
         prev = prev.at[lo].set(cur[lo]).at[hi].set(cur[hi])
     sched = tiling.make_diamond_schedule(plan.d_w, r, n_steps,
                                          y_lo=r, y_hi=ny - r)
+    arrays, scalars = ir.split_coeffs(spec, coeffs)
+    scalars = tuple(float(x) for x in scalars)
     # buffers[p] holds values of time levels with parity p
     bufs = [cur, prev]  # t=0 is even -> bufs[0]; prev is the t=-1 (odd) level
     for row in sched.rows:
         for tile in row:
             for (t, y0, y1) in tile.spans:
                 p = t % 2
-                bufs[1 - p] = _span_update(spec, bufs[0], bufs[1], coeffs,
-                                           y0, y1, p)
+                bufs[1 - p] = _span_update(spec, bufs[0], bufs[1], arrays,
+                                           scalars, y0, y1, p)
     p = n_steps % 2
     return bufs[p], bufs[1 - p]
 
@@ -118,6 +121,8 @@ def run_compiled(spec: st.StencilSpec, state, coeffs, n_steps: int,
         prev = prev.at[lo].set(cur[lo]).at[hi].set(cur[hi])
     comp = tiling.compile_schedule(
         tiling.make_diamond_schedule(plan.d_w, r, n_steps, r, ny - r))
+    arrays, scalars = ir.split_coeffs(spec, coeffs)
+    scalars = tuple(float(x) for x in scalars)
     bufs = [cur, prev]
     for i in range(comp.n_rows):
         p0 = int(comp.parity[i])
@@ -129,8 +134,8 @@ def run_compiled(spec: st.StencilSpec, state, coeffs, n_steps: int,
                 if y1 <= y0:
                     continue
                 p = (p0 + tau) % 2
-                bufs[1 - p] = _span_update(spec, bufs[0], bufs[1], coeffs,
-                                           y0, y1, p)
+                bufs[1 - p] = _span_update(spec, bufs[0], bufs[1], arrays,
+                                           scalars, y0, y1, p)
     p = n_steps % 2
     return bufs[p], bufs[1 - p]
 

@@ -8,7 +8,7 @@ benchmarks — resolves the stored plan in O(1) and performs zero measurements.
 Registry layout (one JSON file, human-diffable):
 
     {"version": 1,
-     "plans": {"<stencil>|<nz>x<ny>x<nx>|w<word>|dx<devices_x>": {
+     "plans": {"<stencil>@<ir fingerprint>|<nz>x<ny>x<nx>|w<word>|dx<dx>": {
          "plan": {"d_w": 16, "n_f": 2, "tg_x": 1, "fused": true, ...},
          "score": 12.3, "source": "measured", "evals": 14,
          "fingerprint": "<hw.fingerprint() at tune time>"}}}
@@ -16,7 +16,9 @@ Registry layout (one JSON file, human-diffable):
 Invalidation: entries record the hardware fingerprint they were tuned on;
 a lookup under a different fingerprint treats the entry as stale (dropped on
 the next save) so a registry file carried to new hardware silently re-tunes
-instead of replaying a wrong plan. Lookups that miss fall back to the
+instead of replaying a wrong plan.  Keys embed the operator's structural IR
+fingerprint; legacy name-only keys (pre-IR files) are dropped at load, so a
+stale cache re-tunes gracefully instead of colliding. Lookups that miss fall back to the
 analytic model score (`autotune.model_score`) — fast, measurement-free —
 and the fallback is memoized per process but never persisted: only the
 deliberate `python -m repro.launch.tune` run writes measured entries.
@@ -50,12 +52,23 @@ def default_grid(spec: StencilSpec) -> tuple[int, int, int]:
     return (10, 18, 14) if spec.radius == 1 else (12, 26, 18)
 
 
-def plan_key(spec: StencilSpec | str, grid_shape, word_bytes: int = 4,
+def plan_key(spec: StencilSpec, grid_shape, word_bytes: int = 4,
              devices_x: int = 1) -> str:
-    """Registry key of one tuning problem (fingerprint lives in the entry)."""
-    name = spec if isinstance(spec, str) else spec.name
+    """Registry key of one tuning problem (hw fingerprint lives in the entry).
+
+    The stencil segment is ``name@<structural fingerprint>`` so two
+    user-defined operators sharing a display name can never collide in the
+    cache.  Only `StencilOp`s are accepted: a bare name would produce the
+    legacy fingerprint-less key that `_load` discards, silently losing the
+    entry on the next start.
+    """
+    if isinstance(spec, str):
+        raise TypeError("plan_key needs a StencilOp (a bare name has no "
+                        "structural fingerprint); resolve it via "
+                        "repro.core.ir.resolve_op first")
     nz, ny, nx = grid_shape
-    return f"{name}|{nz}x{ny}x{nx}|w{word_bytes}|dx{devices_x}"
+    return f"{spec.name}@{spec.fingerprint}|{nz}x{ny}x{nx}|w{word_bytes}" \
+           f"|dx{devices_x}"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,6 +144,9 @@ class PlanRegistry:
         except (OSError, ValueError, AttributeError):
             return
         for key, d in plans.items():
+            if "@" not in key.split("|", 1)[0]:
+                continue            # legacy name-only key (pre-IR schema):
+                                    # no fingerprint -> silently invalidated
             try:
                 self._entries[key] = RegistryEntry.from_dict(d)
             except (ValueError, KeyError, TypeError):
@@ -157,7 +173,7 @@ class PlanRegistry:
         """Number of entries currently held (including stale ones)."""
         return len(self._entries)
 
-    def get(self, spec: StencilSpec | str, grid_shape, word_bytes: int = 4,
+    def get(self, spec: StencilSpec, grid_shape, word_bytes: int = 4,
             devices_x: int = 1,
             fingerprint: str | None = None) -> RegistryEntry | None:
         """Cached entry for the problem, or None on miss / stale fingerprint.
@@ -173,13 +189,12 @@ class PlanRegistry:
         if entry.fingerprint != fingerprint:
             del self._entries[key]      # stale: tuned on different hardware
             return None
-        if (isinstance(spec, StencilSpec)
-                and entry.plan.d_w % (2 * spec.radius)):
+        if entry.plan.d_w % (2 * spec.radius):
             del self._entries[key]      # geometry invalid for this stencil
             return None
         return entry
 
-    def put(self, spec: StencilSpec | str, grid_shape, plan: MWDPlan,
+    def put(self, spec: StencilSpec, grid_shape, plan: MWDPlan,
             score: float, *, source: str = "measured", evals: int = 0,
             word_bytes: int = 4, devices_x: int = 1,
             fingerprint: str | None = None,

@@ -1,9 +1,16 @@
-"""The paper's four corner-case stencils (Listings 1-4) as JAX sweeps.
+"""Stencil operators as IR instances + the portable sweep/step/problem API.
 
-Grid layout is (z, y, x) with x the leading (contiguous, vectorized) dimension,
-matching the paper's Cartesian ordering. A "sweep" advances one time step on
-the interior [R:-R] of every axis; boundary cells are Dirichlet (carried
-through unchanged).
+Grid layout is (z, y, x) with x the leading (contiguous, vectorized)
+dimension, matching the paper's Cartesian ordering.  A "sweep" advances one
+time step on the interior [R:-R] of every axis; boundary cells are Dirichlet
+(carried through unchanged).
+
+Since the IR refactor there are no hand-written sweep bodies here: every
+operator — the paper's four corner cases and any user-defined `StencilOp` —
+executes the sweep *generated* from its declarative tap list by
+`repro.core.ir.make_sweep`.  The hand transcriptions of the paper's
+Listings 1-4 are retained in `repro.core.listings` purely as bitwise
+references for the codegen property tests.
 
 State convention (uniform across 1st- and 2nd-order-in-time stencils):
     state = (cur, prev)      # prev is the previous time level (unused storage
@@ -14,155 +21,49 @@ This mirrors the paper's pointer swapping.
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Callable
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
+from repro.core import ir
+from repro.core.ir import StencilOp
 
-@dataclasses.dataclass(frozen=True)
-class StencilSpec:
-    """Static description of one stencil operator (drives all models)."""
+# The spec type consumed by models/autotune/registry IS the IR operator: all
+# analytics (flops_per_lup, n_streams, radius, code balance) are derived
+# properties of the tap structure.
+StencilSpec = StencilOp
 
-    name: str
-    radius: int                 # R: semi-bandwidth (1 for 7-pt, 4 for 25-pt)
-    time_order: int             # 1 (Jacobi) or 2 (wave equation)
-    n_coeff_arrays: int         # domain-sized coefficient streams
-    flops_per_lup: int          # paper's figures: 7 / 13 / 33 / 37
-    # N_D of Eqs. 4-5: read streams incl. the write-allocate (RFO) of the
-    # destination: 7pt-const 2, 7pt-var 9, 25pt-const 3, 25pt-var 15.
-    n_streams: int
-
-    @property
-    def bytes_per_cell(self) -> int:
-        """Domain-sized arrays touched per cell (solution levels + coeffs)."""
-        return 2 + self.n_coeff_arrays
-
-    def spatial_code_balance(self, word_bytes: int = 8) -> float:
-        """Optimal spatial-blocking code balance, bytes/LUP (paper Sec. 5.2).
-
-        = word * (N_D + 1): all read streams + the store.
-        (24 / 80 / 32 / 128 B/LUP at double precision for the four stencils.)
-        """
-        return word_bytes * (self.n_streams + 1)
-
-
-SPEC_7C = StencilSpec("7pt-const", radius=1, time_order=1, n_coeff_arrays=0,
-                      flops_per_lup=7, n_streams=2)
-SPEC_7V = StencilSpec("7pt-var", radius=1, time_order=1, n_coeff_arrays=7,
-                      flops_per_lup=13, n_streams=9)
-SPEC_25C = StencilSpec("25pt-const", radius=4, time_order=2, n_coeff_arrays=1,
-                       flops_per_lup=33, n_streams=3)
-SPEC_25V = StencilSpec("25pt-var", radius=4, time_order=1, n_coeff_arrays=13,
-                       flops_per_lup=37, n_streams=15)
+SPEC_7C = ir.OPS["7pt-const"]
+SPEC_7V = ir.OPS["7pt-var"]
+SPEC_25C = ir.OPS["25pt-const"]
+SPEC_25V = ir.OPS["25pt-var"]
 
 SPECS = {s.name: s for s in (SPEC_7C, SPEC_7V, SPEC_25C, SPEC_25V)}
 
 
-# ---------------------------------------------------------------------------
-# Shifted-slice helpers
-# ---------------------------------------------------------------------------
+def sweep_fn(spec: StencilOp) -> Callable:
+    """The (cur, prev, coeffs) -> new sweep implementing `spec`.
 
-def _core(a: jax.Array, r: int) -> jax.Array:
-    return a[r:-r, r:-r, r:-r]
-
-
-def _shift(a: jax.Array, r: int, axis: int, off: int) -> jax.Array:
-    """Core-sized view of `a` displaced by `off` along `axis` (|off| <= r)."""
-    idx = []
-    for ax in range(3):
-        d = off if ax == axis else 0
-        idx.append(slice(r + d, a.shape[ax] - r + d or None))
-    return a[tuple(idx)]
-
-
-# ---------------------------------------------------------------------------
-# The four sweeps (Listings 1-4)
-# ---------------------------------------------------------------------------
-
-def sweep_7pt_const(cur, prev, coeffs):
-    """Listing 1: U = c0*V + c1*(6 axis neighbors). coeffs = (c0, c1) scalars."""
-    del prev
-    c0, c1 = coeffs
-    r = 1
-    acc = sum(_shift(cur, r, ax, o) for ax in range(3) for o in (-1, 1))
-    out_core = c0 * _core(cur, r) + c1 * acc
-    return cur.at[r:-r, r:-r, r:-r].set(out_core)
-
-
-def sweep_7pt_var(cur, prev, coeffs):
-    """Listing 2: per-direction coefficient arrays, no symmetry.
-
-    coeffs: array (7, Nz, Ny, Nx): [center, z-, z+, y-, y+, x-, x+].
+    Accepts the op's packed coefficient convention (see `ir.split_coeffs`);
+    the body is generated from the IR, not looked up by name.
     """
-    del prev
-    r = 1
-    c = coeffs
-    out_core = _core(c[0], r) * _core(cur, r)
-    k = 1
-    for ax in range(3):
-        for o in (-1, 1):
-            out_core = out_core + _core(c[k], r) * _shift(cur, r, ax, o)
-            k += 1
-    return cur.at[r:-r, r:-r, r:-r].set(out_core)
+    gen = ir.make_sweep(spec)
+
+    def sweep(cur, prev, coeffs):
+        arrays, scalars = ir.split_coeffs(spec, coeffs)
+        return gen(cur, prev, arrays, scalars)
+
+    return sweep
 
 
-def sweep_25pt_const(cur, prev, coeffs):
-    """Listing 3: 2nd-order-in-time wave equation, R=4, axis symmetry.
-
-    coeffs = (C, c) with C a domain-sized array and c = (c0..c4) scalars.
-    U_new = 2*V - U + C * [c0*V + sum_r c_r * (6 neighbors at distance r)].
-    """
-    C, c = coeffs
-    r = 4
-    lap = c[0] * _core(cur, r)
-    for d in range(1, 5):
-        acc = sum(_shift(cur, r, ax, o * d) for ax in range(3) for o in (-1, 1))
-        lap = lap + c[d] * acc
-    out_core = 2.0 * _core(cur, r) - _core(prev, r) + _core(C, r) * lap
-    return cur.at[r:-r, r:-r, r:-r].set(out_core)
-
-
-def sweep_25pt_var(cur, prev, coeffs):
-    """Listing 4: R=4, variable anisotropic coefficients, axis symmetry.
-
-    coeffs: array (13, Nz, Ny, Nx): [center] + [axis 0..2][dist 1..4].
-    """
-    del prev
-    r = 4
-    c = coeffs
-    out_core = _core(c[0], r) * _core(cur, r)
-    for ax in range(3):
-        for d in range(1, 5):
-            w = _core(c[1 + ax * 4 + (d - 1)], r)
-            out_core = out_core + w * (_shift(cur, r, ax, d) +
-                                       _shift(cur, r, ax, -d))
-    return cur.at[r:-r, r:-r, r:-r].set(out_core)
-
-
-_SWEEPS: dict[str, Callable] = {
-    "7pt-const": sweep_7pt_const,
-    "7pt-var": sweep_7pt_var,
-    "25pt-const": sweep_25pt_const,
-    "25pt-var": sweep_25pt_var,
-}
-
-
-def sweep_fn(spec: StencilSpec) -> Callable:
-    """The (cur, prev, coeffs) -> new sweep implementing `spec`."""
-    return _SWEEPS[spec.name]
-
-
-def step(spec: StencilSpec, state, coeffs):
+def step(spec: StencilOp, state, coeffs):
     """One time step with pointer swap: (cur, prev) -> (new, cur)."""
     cur, prev = state
     new = sweep_fn(spec)(cur, prev, coeffs)
     return (new, cur)
 
 
-def run_naive(spec: StencilSpec, state, coeffs, n_steps: int):
+def run_naive(spec: StencilOp, state, coeffs, n_steps: int):
     """Reference: n_steps sequential full-grid sweeps (paper Fig. 1a)."""
     def body(st, _):
         return step(spec, st, coeffs), None
@@ -170,29 +71,6 @@ def run_naive(spec: StencilSpec, state, coeffs, n_steps: int):
     return state
 
 
-# ---------------------------------------------------------------------------
-# Problem construction
-# ---------------------------------------------------------------------------
-
-def make_problem(spec: StencilSpec, shape, dtype=jnp.float32, seed: int = 0):
+def make_problem(spec: StencilOp, shape, dtype=None, seed: int = 0):
     """Random initial state + coefficients for `spec` on grid `shape` (z,y,x)."""
-    rng = np.random.default_rng(seed)
-    nz, ny, nx = shape
-
-    def arr(*s):
-        return jnp.asarray(rng.standard_normal(s), dtype=dtype)
-
-    cur = arr(nz, ny, nx)
-    prev = arr(nz, ny, nx) if spec.time_order == 2 else cur
-    if spec.name == "7pt-const":
-        coeffs = (jnp.asarray(0.4, dtype), jnp.asarray(0.1, dtype))
-    elif spec.name == "7pt-var":
-        coeffs = 0.1 * arr(7, nz, ny, nx)
-    elif spec.name == "25pt-const":
-        c = jnp.asarray([0.1, 0.06, 0.045, 0.03, 0.015], dtype)
-        coeffs = (0.1 * arr(nz, ny, nx), c)
-    elif spec.name == "25pt-var":
-        coeffs = 0.02 * arr(13, nz, ny, nx)
-    else:
-        raise ValueError(spec.name)
-    return (cur, prev), coeffs
+    return ir.make_problem(spec, shape, dtype=dtype, seed=seed)

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map as _shard_map
+from repro.core import ir
 from repro.core import stencils as st
 from repro.core.mwd import MWDPlan
 from repro.distributed import halo
@@ -53,19 +54,18 @@ class GridSharding:
 def _extend_coeffs(spec: st.StencilSpec, t_block: int, gs: GridSharding,
                    coeffs):
     """Inside shard_map: one-time halo exchange + x-pad of the coefficient
-    streams. Coefficients are time-invariant, so re-exchanging them every
-    super-step (as the naive stepper does) wastes ~N_coeff/N_streams of the
-    halo traffic — hoisting them is a SS Perf iteration."""
+    streams. Coefficients travel in the canonical (stacked arrays, scalar
+    vector) form for EVERY operator; they are time-invariant, so
+    re-exchanging them every super-step (as the naive stepper does) wastes
+    ~N_coeff/N_streams of the halo traffic — hoisting them is a SS Perf
+    iteration."""
+    arrays, svec = coeffs
+    if not arrays.shape[0]:
+        return (arrays, svec)
     g = spec.radius * t_block
-    ext = lambda a: halo.exchange_2d(a, g, axis_z=gs.z_axes, axis_y=gs.y_axis)
-    padx = lambda a: jnp.pad(a, [(0, 0)] * (a.ndim - 1) + [(g, g)],
-                             mode="edge")
-    if spec.time_order == 2:
-        c_arr, c_vec = coeffs
-        return (padx(ext(c_arr)), c_vec)
-    if spec.n_coeff_arrays:
-        return padx(ext(coeffs))
-    return coeffs
+    ext = halo.exchange_2d(arrays, g, axis_z=gs.z_axes, axis_y=gs.y_axis)
+    return (jnp.pad(ext, [(0, 0)] * (ext.ndim - 1) + [(g, g)], mode="edge"),
+            svec)
 
 
 def _local_super_step(spec: st.StencilSpec, t_block: int, gs: GridSharding,
@@ -84,9 +84,10 @@ def _local_super_step(spec: st.StencilSpec, t_block: int, gs: GridSharding,
                              mode="edge")
     cur_e, prev_e = padx(cur_e), padx(prev_e)
     if hoisted:
-        coeffs_e = coeffs
+        arrays_e, svec = coeffs
     else:
-        coeffs_e = _extend_coeffs(spec, t_block, gs, coeffs)
+        arrays_e, svec = _extend_coeffs(spec, t_block, gs, coeffs)
+    arrays_e = arrays_e if arrays_e.shape[0] else None
 
     # global coordinates of the extended block -> Dirichlet frame mask
     nz_l, ny_l, nx_l = cur.shape
@@ -100,9 +101,10 @@ def _local_super_step(spec: st.StencilSpec, t_block: int, gs: GridSharding,
              | (gx < r) | (gx >= nx_g - r))
     frame_vals = cur_e
 
+    sweep = ir.make_sweep(spec)
     a, b = cur_e, prev_e
     for _ in range(t_block):
-        new = st.sweep_fn(spec)(a, b, coeffs_e)
+        new = sweep(a, b, arrays_e, svec)
         new = jnp.where(frame, frame_vals, new)
         a, b = new, a
     crop = (slice(g, g + nz_l), slice(g, g + ny_l), slice(g, g + nx_l))
@@ -111,7 +113,7 @@ def _local_super_step(spec: st.StencilSpec, t_block: int, gs: GridSharding,
 
 def _local_super_step_mwd(spec: st.StencilSpec, plan: MWDPlan, t_block: int,
                           gs: GridSharding, grid_shape, hoisted: bool,
-                          plan_scalars, cur, prev, coeffs):
+                          scalars, cur, prev, coeffs):
     """MWD-kernel local super-step: ONE fused pallas_call per halo exchange.
 
     Same deep-halo contract as _local_super_step, but the t_block local steps
@@ -119,7 +121,9 @@ def _local_super_step_mwd(spec: st.StencilSpec, plan: MWDPlan, t_block: int,
     sweeps. The global Dirichlet frame is enforced inside the kernel via
     per-shard dynamic interior bounds (traced from axis_index); the diamond
     tessellation spans the full extended block so halo cells advance the
-    intermediate levels the interior needs.
+    intermediate levels the interior needs.  `scalars` carries the op's
+    compile-time scalar coefficients as static Python floats (the kernel
+    inlines them; the traced scalar vector in `coeffs` is ignored here).
     """
     r = spec.radius
     g = r * t_block
@@ -132,13 +136,9 @@ def _local_super_step_mwd(spec: st.StencilSpec, plan: MWDPlan, t_block: int,
     padx = lambda a: jnp.pad(a, [(0, 0)] * (a.ndim - 1) + [(g, g)],
                              mode="edge")
     cur_e, prev_e = padx(cur_e), padx(prev_e)
-    coeffs_e = coeffs if hoisted else _extend_coeffs(spec, t_block, gs, coeffs)
-    # the kernel bakes scalar coefficients in as compile-time constants;
-    # traced scalars cannot cross into it, so swap in the static values
-    if spec.time_order == 2:
-        coeffs_e = (coeffs_e[0], plan_scalars)
-    elif not spec.n_coeff_arrays:
-        coeffs_e = plan_scalars
+    arrays_e, _ = (coeffs if hoisted
+                   else _extend_coeffs(spec, t_block, gs, coeffs))
+    arrays_e = arrays_e if arrays_e.shape[0] else None
 
     nz_l, ny_l, nx_l = cur.shape
     nz_e, ny_e, nx_e = cur_e.shape
@@ -165,39 +165,45 @@ def _local_super_step_mwd(spec: st.StencilSpec, plan: MWDPlan, t_block: int,
                  | (gx < r) | (gx >= nx_g - r))
         prev_e = jnp.where(frame, cur_e, prev_e)
 
-    a, b = stencil_mwd.mwd_run(spec, (cur_e, prev_e), coeffs_e, t_block,
-                               d_w=plan.d_w, n_f=plan.n_f, fused=plan.fused,
-                               interior=interior, y_domain=(0, ny_e))
+    a, b = stencil_mwd.mwd_run(spec, (cur_e, prev_e), arrays_e, scalars,
+                               t_block, d_w=plan.d_w, n_f=plan.n_f,
+                               fused=plan.fused, interior=interior,
+                               y_domain=(0, ny_e))
     crop = (slice(g, g + nz_l), slice(g, g + ny_l), slice(g, g + nx_l))
     return a[crop], b[crop]
 
 
-def _coeff_specs(spec: st.StencilSpec, gs: GridSharding) -> P | tuple:
-    if spec.time_order == 2:
-        return (gs.spec(), P())
-    if spec.n_coeff_arrays:
-        return gs.spec(leading=1)
-    return P()
+def _coeff_specs(spec: st.StencilSpec, gs: GridSharding) -> tuple:
+    """PartitionSpecs of the canonical (stacked arrays, scalar vector) pair.
+
+    Uniform for every operator: the stacked stream shards like the grid
+    (leading slot axis unsharded), the scalar vector replicates.
+    """
+    del spec
+    return (gs.spec(leading=1), P())
 
 
 def make_super_step(spec: st.StencilSpec, mesh: jax.sharding.Mesh,
                     grid_shape, t_block: int, *, hoisted: bool = False,
-                    plan: MWDPlan | None = None, plan_scalars=None):
+                    plan: MWDPlan | None = None, scalars=None):
     """Build the jitted distributed super-step: (cur, prev, coeffs) -> state.
+
+    `coeffs` is the canonical (stacked arrays, scalar vector) pair — see
+    `canonical_coeffs` — for every operator, first- or second-order.
 
     hoisted=True expects coefficients pre-extended by make_coeff_extender
     (halo exchange once at setup instead of every super-step).
 
     plan: when given, each device advances its t_block local steps with ONE
     fused MWD kernel launch (the compiled diamond schedule) instead of
-    t_block jnp sweeps — one launch per halo exchange. plan_scalars carries
-    the stencil's scalar coefficients as static Python floats (the kernel
-    inlines them); required for scalar-coefficient stencils."""
+    t_block jnp sweeps — one launch per halo exchange. `scalars` carries
+    the op's scalar coefficients as static Python floats (the kernel
+    inlines them); required for scalar-coefficient operators."""
     gs = GridSharding(mesh)
     kwargs = {}
     if plan is not None:
         local = partial(_local_super_step_mwd, spec, plan, t_block, gs,
-                        grid_shape, hoisted, plan_scalars)
+                        grid_shape, hoisted, scalars)
         kwargs["check_rep"] = False     # no replication rule for pallas_call
     else:
         local = partial(_local_super_step, spec, t_block, gs, grid_shape,
@@ -225,6 +231,30 @@ def make_coeff_extender(spec: st.StencilSpec, mesh: jax.sharding.Mesh,
     return jax.jit(fn)
 
 
+def canonical_coeffs(spec: st.StencilSpec, coeffs, grid_shape, dtype):
+    """Packed coefficients -> the canonical (stacked arrays, scalar vector).
+
+    Both halves always exist (possibly zero-length along their leading axis,
+    shaped over `grid_shape` so the grid sharding applies) so one shard_map
+    signature covers every operator.
+    """
+    arrays, scalars = ir.split_coeffs(spec, coeffs)
+    if arrays is None:
+        arrays = jnp.zeros((0,) + tuple(grid_shape), dtype)
+    if scalars:
+        svec = jnp.stack([jnp.asarray(v, dtype) for v in scalars])
+    else:
+        svec = jnp.zeros((0,), dtype)
+    return arrays, svec
+
+
+def coeff_sds(spec: st.StencilSpec, grid_shape, dtype=jnp.float32):
+    """ShapeDtypeStructs of the canonical coefficient pair on `grid_shape`."""
+    return (jax.ShapeDtypeStruct((spec.n_coeff_arrays,) + tuple(grid_shape),
+                                 dtype),
+            jax.ShapeDtypeStruct((spec.n_scalars,), dtype))
+
+
 def extended_coeff_sds(spec: st.StencilSpec, mesh, grid_shape, t_block: int,
                        dtype=jnp.float32):
     """Global ShapeDtypeStruct of the hoisted (pre-extended) coefficients."""
@@ -236,12 +266,10 @@ def extended_coeff_sds(spec: st.StencilSpec, mesh, grid_shape, t_block: int,
         n_z *= mesh.shape[a]
     n_y = mesh.shape[gs.y_axis]
     ext = (nz + 2 * g * n_z, ny + 2 * g * n_y, nx + 2 * g)
-    if spec.time_order == 2:
-        return (jax.ShapeDtypeStruct(ext, dtype),
-                jax.ShapeDtypeStruct((5,), dtype))
     if spec.n_coeff_arrays:
-        return jax.ShapeDtypeStruct((spec.n_coeff_arrays,) + ext, dtype)
-    return (jax.ShapeDtypeStruct((), dtype),) * 2
+        return (jax.ShapeDtypeStruct((spec.n_coeff_arrays,) + ext, dtype),
+                jax.ShapeDtypeStruct((spec.n_scalars,), dtype))
+    return coeff_sds(spec, grid_shape, dtype)
 
 
 def run_distributed(spec: st.StencilSpec, mesh, state, coeffs, n_steps: int,
@@ -265,29 +293,25 @@ def run_distributed(spec: st.StencilSpec, mesh, state, coeffs, n_steps: int,
     prev = (jax.device_put(prev, gs.sharding()) if spec.time_order == 2
             else jax.device_put(cur, gs.sharding()))
     cur = jax.device_put(cur, gs.sharding())
-    plan_scalars = None
-    if plan is not None:    # hoist scalar coefficients while still concrete
-        if spec.time_order == 2:
-            plan_scalars = tuple(float(x) for x in coeffs[1])
-        elif not spec.n_coeff_arrays:
-            plan_scalars = tuple(float(x) for x in coeffs)
-    if spec.time_order == 2:
-        c_arr, c_vec = coeffs
-        coeffs = (jax.device_put(c_arr, gs.sharding()), jnp.asarray(c_vec))
-    elif spec.n_coeff_arrays:
-        coeffs = jax.device_put(coeffs, gs.sharding(leading=1))
+    arrays, svec = canonical_coeffs(spec, coeffs, cur.shape, cur.dtype)
+    # the MWD kernel bakes scalar coefficients in as compile-time constants;
+    # hoist them to static Python floats while they are still concrete
+    scalars = tuple(float(x) for x in svec) if plan is not None else None
+    if spec.n_coeff_arrays:
+        arrays = jax.device_put(arrays, gs.sharding(leading=1))
+    coeffs = (arrays, svec)
     if hoisted:
         if n_steps % t_block:
             raise ValueError("hoisted mode needs t_block | n_steps")
         coeffs = make_coeff_extender(spec, mesh, t_block)(coeffs)
     step = make_super_step(spec, mesh, cur.shape, t_block, hoisted=hoisted,
-                           plan=plan, plan_scalars=plan_scalars)
+                           plan=plan, scalars=scalars)
     done = 0
     while done < n_steps:
         tb = min(t_block, n_steps - done)
         if tb != t_block:
             step = make_super_step(spec, mesh, cur.shape, tb, plan=plan,
-                                   plan_scalars=plan_scalars)
+                                   scalars=scalars)
         cur, prev = step(cur, prev, coeffs)
         done += tb
     return cur, prev

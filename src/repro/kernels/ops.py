@@ -2,12 +2,15 @@
 
 Every entry point takes (spec, state, coeffs, n_steps [, plan params]) and is
 validated against repro.kernels.ref (pure-jnp oracle) by tests/test_kernels.py
-over shape/dtype sweeps.
+over shape/dtype sweeps.  `spec` is any `StencilOp` — the paper's four or a
+user-defined operator — and `coeffs` uses the op's packed convention
+(`repro.core.ir.split_coeffs`).
 
-Scalar stencil coefficients are baked into the kernels as compile-time
-constants (the paper's codes inline them too), so the wrappers hoist them out
-of the traced arguments (static) before jitting; domain-sized coefficient
-streams stay traced arrays.
+Compile-time scalar coefficients are baked into the kernels as constants
+(the paper's codes inline them too), so the wrappers split the packed
+coefficients into the canonical (arrays, scalars) form and hoist the scalars
+out of the traced arguments (static) before jitting; the stacked per-cell
+coefficient stream stays a traced array.
 """
 
 from __future__ import annotations
@@ -16,6 +19,7 @@ from functools import partial
 
 import jax
 
+from repro.core import ir
 from repro.core.mwd import MWDPlan
 from repro.core.stencils import StencilSpec
 from repro.kernels import ref as _ref
@@ -29,9 +33,10 @@ def resolve_plan(spec: StencilSpec, state, plan) -> MWDPlan:
 
     `plan` may be an `MWDPlan` (used as-is) or the string "auto", which
     resolves registry-first against the persistent tuned-plan cache
-    (`repro.core.registry`) keyed by stencil, grid shape, word size, and the
-    hardware fingerprint — falling back to the analytic model-scored
-    auto-tuner on a miss. Single-device launches resolve with devices_x=1.
+    (`repro.core.registry`) keyed by the operator's structural fingerprint,
+    grid shape, word size, and the hardware fingerprint — falling back to the
+    analytic model-scored auto-tuner on a miss. Single-device launches
+    resolve with devices_x=1.
     """
     if isinstance(plan, MWDPlan):
         return plan
@@ -46,25 +51,15 @@ def resolve_plan(spec: StencilSpec, state, plan) -> MWDPlan:
 
 
 def _split_coeffs(spec: StencilSpec, coeffs):
-    """-> (traced_arrays_or_None, static_scalars_or_None)."""
-    if spec.time_order == 2:
-        c_arr, c_vec = coeffs
-        return c_arr, tuple(float(x) for x in c_vec)
-    if spec.n_coeff_arrays:
-        return coeffs, None
-    return None, tuple(float(x) for x in coeffs)
-
-
-def _join_coeffs(spec: StencilSpec, arrays, scalars):
-    if spec.time_order == 2:
-        return (arrays, scalars)
-    return arrays if spec.n_coeff_arrays else scalars
+    """-> (traced_stacked_arrays_or_None, static_scalar_floats)."""
+    arrays, scalars = ir.split_coeffs(spec, coeffs)
+    return arrays, tuple(float(x) for x in scalars)
 
 
 @partial(jax.jit, static_argnames=("spec", "scalars", "n_steps", "bz"))
 def _spatial(spec, state, arrays, scalars, n_steps, bz):
-    coeffs = _join_coeffs(spec, arrays, scalars)
-    return stencil_sweep.run_sweep(spec, state, coeffs, n_steps, bz=bz)
+    return stencil_sweep.run_sweep(spec, state, arrays, scalars, n_steps,
+                                   bz=bz)
 
 
 def spatial(spec: StencilSpec, state, coeffs, n_steps: int, bz: int = 8):
@@ -76,8 +71,7 @@ def spatial(spec: StencilSpec, state, coeffs, n_steps: int, bz: int = 8):
 @partial(jax.jit,
          static_argnames=("spec", "scalars", "n_steps", "t_block", "bz", "by"))
 def _ghostzone(spec, state, arrays, scalars, n_steps, t_block, bz, by):
-    coeffs = _join_coeffs(spec, arrays, scalars)
-    return stencil_fused.run_fused(spec, state, coeffs, n_steps,
+    return stencil_fused.run_fused(spec, state, arrays, scalars, n_steps,
                                    t_block=t_block, bz=bz, by=by)
 
 
@@ -91,9 +85,8 @@ def ghostzone(spec: StencilSpec, state, coeffs, n_steps: int,
 @partial(jax.jit, static_argnames=("spec", "scalars", "n_steps", "d_w", "n_f",
                                    "fused"))
 def _mwd(spec, state, arrays, scalars, n_steps, d_w, n_f, fused):
-    coeffs = _join_coeffs(spec, arrays, scalars)
-    return stencil_mwd.mwd_run(spec, state, coeffs, n_steps, d_w=d_w, n_f=n_f,
-                               fused=fused)
+    return stencil_mwd.mwd_run(spec, state, arrays, scalars, n_steps,
+                               d_w=d_w, n_f=n_f, fused=fused)
 
 
 def mwd(spec: StencilSpec, state, coeffs, n_steps: int,

@@ -6,6 +6,12 @@ once. HBM code balance drops by ~T_b at the price of redundant halo compute —
 the right trade at TPU's 0.004 B/F machine balance (see DESIGN.md), which is
 why the paper's CPU-era rejection of overlapped tiling is revisited here.
 
+The in-VMEM compute is the sweep generated from the operator IR; the VMEM
+window set is derived from the op too: current level, previous level iff
+`time_order == 2`, one stacked coefficient window iff the op has array
+coefficients, and a ping-pong buffer iff first-order (a 2nd-order op
+ping-pongs through its loaded prev window instead).
+
 Validity shrinks by R per in-VMEM step, so after T_b steps exactly the
 un-haloed block center is correct; everything else is clipped by the wrapper.
 """
@@ -19,6 +25,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import ir
 from repro.core import stencils as st
 from repro.kernels import config
 
@@ -45,15 +52,14 @@ def _kernel(spec: st.StencilSpec, t_block: int, bz: int, by: int,
         cp.start()
         cp.wait()
 
+    # window layout: [cur] [+prev if 2nd order] [+coeff stack] [+ping-pong]
+    k = 1
     if spec.time_order == 2:
-        bufs = [wins[0], wins[1]]          # cur, prev (both loaded)
-        coeffs = (wins[2][...], scalars)
-    elif spec.n_coeff_arrays:
-        bufs = [wins[0], wins[2]]          # cur + un-loaded ping-pong buffer
-        coeffs = wins[1][...]
+        bufs = [wins[0], wins[k]]          # cur, prev (both loaded)
+        k += 1
     else:
-        bufs = [wins[0], wins[1]]          # cur + un-loaded ping-pong buffer
-        coeffs = scalars
+        bufs = [wins[0], wins[-1]]         # cur + un-loaded ping-pong buffer
+    coeff_win = wins[k][...] if spec.n_coeff_arrays else None
     # Dirichlet frame mask in window coordinates: cells whose ORIGINAL grid
     # coordinate lies in the fixed boundary frame (or in the pad) must be
     # restored to their initial values after every in-VMEM step — the naive
@@ -67,8 +73,9 @@ def _kernel(spec: st.StencilSpec, t_block: int, bz: int, by: int,
              | (x_io < g + r) | (x_io >= g + nx - r))
     w_frame[...] = bufs[0][...]
 
+    sweep = ir.make_sweep(spec)
     for _ in range(t_block):  # static unroll: T_b in-VMEM steps
-        new = st.sweep_fn(spec)(bufs[0][...], bufs[1][...], coeffs)
+        new = sweep(bufs[0][...], bufs[1][...], coeff_win, scalars)
         bufs[1][...] = jnp.where(frame, w_frame[...], new)
         bufs = bufs[::-1]
 
@@ -76,7 +83,7 @@ def _kernel(spec: st.StencilSpec, t_block: int, bz: int, by: int,
     prev_out[...] = bufs[1][g:g + bz, g:g + by, :]
 
 
-def fused_pass(spec: st.StencilSpec, state, coeffs, t_block: int, *,
+def fused_pass(spec: st.StencilSpec, state, arrays, scalars, t_block: int, *,
                bz: int = 16, by: int = 16):
     """Advance t_block steps in one fused kernel pass: state -> state."""
     cur, prev = state
@@ -94,17 +101,13 @@ def fused_pass(spec: st.StencilSpec, state, coeffs, t_block: int, *,
     win = (bz + 2 * g, by + 2 * g, nxp)
     inputs = [pad(cur)]
     win_shapes = [win]
-    scalars = ()
     if spec.time_order == 2:
-        c_arr, c_vec = coeffs
-        inputs += [pad(prev), pad(c_arr)]
-        win_shapes += [win, win]
-        scalars = tuple(float(x) for x in c_vec)
-    elif spec.n_coeff_arrays:
-        inputs.append(jnp.pad(coeffs, ((0, 0),) + pads, mode="edge"))
-        win_shapes += [(spec.n_coeff_arrays,) + win, win]  # + ping-pong buf
-    else:
-        scalars = tuple(float(x) for x in coeffs)
+        inputs.append(pad(prev))
+        win_shapes.append(win)
+    if spec.n_coeff_arrays:
+        inputs.append(jnp.pad(arrays, ((0, 0),) + pads, mode="edge"))
+        win_shapes.append((spec.n_coeff_arrays,) + win)
+    if spec.time_order != 2:
         win_shapes.append(win)                              # ping-pong buf
 
     kern = functools.partial(_kernel, spec, t_block, bz, by,
@@ -129,12 +132,12 @@ def fused_pass(spec: st.StencilSpec, state, coeffs, t_block: int, *,
     return (new_cur, new_prev)
 
 
-def run_fused(spec: st.StencilSpec, state, coeffs, n_steps: int,
+def run_fused(spec: st.StencilSpec, state, arrays, scalars, n_steps: int,
               t_block: int = 4, *, bz: int = 16, by: int = 16):
     """Advance n_steps in fused T_b-step ghost-zone passes (last may be short)."""
     done = 0
     while done < n_steps:
         tb = min(t_block, n_steps - done)
-        state = fused_pass(spec, state, coeffs, tb, bz=bz, by=by)
+        state = fused_pass(spec, state, arrays, scalars, tb, bz=bz, by=by)
         done += tb
     return state

@@ -45,6 +45,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import ir
 from repro.core import stencils as st
 from repro.core import tiling
 from repro.kernels import config
@@ -112,7 +113,7 @@ def _mwd_kernel(spec: st.StencilSpec, d_w: int, n_f: int, scalars,
             cp.start()
             cp.wait()
 
-        coeff_buf = bufs[2] if len(bufs) > 2 else None
+        coeff_buf = bufs[2] if spec.n_coeff_arrays else None
         nxp = bufs[0].shape[-1]
         shape = (n_f, wy, nxp)
         y_io = jax.lax.broadcasted_iota(jnp.int32, shape, 1) + w0
@@ -126,6 +127,8 @@ def _mwd_kernel(spec: st.StencilSpec, d_w: int, n_f: int, scalars,
                    & (y_io >= lo_y) & (y_io < hi_y))
 
         # --- T in-tile updates at static buffer offsets -------------------
+        sweep = ir.make_sweep(spec)
+
         def updates(p0: int):
             for tau in range(t_steps):
                 zb = r * (t_steps - tau)    # buffer row of the N_F targets
@@ -133,13 +136,9 @@ def _mwd_kernel(spec: st.StencilSpec, d_w: int, n_f: int, scalars,
                 src_b, dst_b = bufs[p], bufs[1 - p]
                 ws = src_b[zb - r:zb + n_f + r]
                 pws = dst_b[zb - r:zb + n_f + r]
-                if spec.time_order == 2:
-                    cf = (coeff_buf[zb - r:zb + n_f + r], scalars)
-                elif spec.n_coeff_arrays:
-                    cf = coeff_buf[:, zb - r:zb + n_f + r]
-                else:
-                    cf = scalars
-                new = st.sweep_fn(spec)(ws, pws, cf)[r:r + n_f]
+                cf = (coeff_buf[:, zb - r:zb + n_f + r]
+                      if spec.n_coeff_arrays else None)
+                new = sweep(ws, pws, cf, scalars)[r:r + n_f]
 
                 y0 = y0_ref[row, k, tau]
                 y1 = y1_ref[row, k, tau]
@@ -175,10 +174,13 @@ def _mwd_kernel(spec: st.StencilSpec, d_w: int, n_f: int, scalars,
         tile_step()
 
 
-def mwd_run(spec: st.StencilSpec, state, coeffs, n_steps: int, *,
+def mwd_run(spec: st.StencilSpec, state, arrays, scalars, n_steps: int, *,
             d_w: int = 8, n_f: int = 2, fused: bool = True,
             interior=None, y_domain: tuple[int, int] | None = None):
     """Advance n_steps with the MWD schedule: state -> state.
+
+    `arrays` is the op's stacked (A, z, y, x) coefficient stream (or None);
+    `scalars` the compile-time scalar tuple the kernel inlines (static).
 
     fused=True (default) executes the whole compiled schedule in ONE
     pallas_call with the parity grids aliased in place; fused=False launches
@@ -216,18 +218,11 @@ def mwd_run(spec: st.StencilSpec, state, coeffs, n_steps: int, *,
     bufs = [pad(cur), pad(prev)]         # parity 0 (even), parity 1 (odd)
     win = (z_ws, d_w + 2 * r, nxp)
     scratch = [pltpu.VMEM(win, cur.dtype), pltpu.VMEM(win, cur.dtype)]
-    scalars = ()
     coeff_in = []
-    if spec.time_order == 2:
-        c_arr, c_vec = coeffs
-        coeff_in = [pad(c_arr)]
-        scratch.append(pltpu.VMEM(win, cur.dtype))
-        scalars = tuple(float(x) for x in c_vec)
-    elif spec.n_coeff_arrays:
-        coeff_in = [jnp.pad(coeffs, ((0, 0),) + pads, mode="edge")]
+    if spec.n_coeff_arrays:
+        coeff_in = [jnp.pad(arrays, ((0, 0),) + pads, mode="edge")]
         scratch.append(pltpu.VMEM((spec.n_coeff_arrays,) + win, cur.dtype))
-    else:
-        scalars = tuple(float(x) for x in coeffs)
+    scalars = tuple(float(x) for x in scalars)
     scratch += [pltpu.SemaphoreType.DMA, pltpu.SemaphoreType.DMA]
 
     y_lo, y_hi = y_domain if y_domain is not None else (r, ny - r)

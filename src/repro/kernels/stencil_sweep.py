@@ -2,10 +2,14 @@
 
 One time step over the grid, z-slab blocked: each grid step manually DMAs an
 overlapping (Bz + 2R) z-window of the (y,x)-padded arrays HBM->VMEM, applies
-the stencil on the VMEM window (reusing the exact jnp sweep from
-repro.core.stencils as the in-VMEM compute), and emits a Bz-thick output slab.
-x is full-width lanes (never tiled — paper Sec. 4.1); y is kept whole here
-(the slab thickness Bz bounds the VMEM footprint).
+the stencil on the VMEM window (the sweep *generated* from the operator's IR
+is the in-VMEM compute), and emits a Bz-thick output slab.  x is full-width
+lanes (never tiled — paper Sec. 4.1); y is kept whole here (the slab
+thickness Bz bounds the VMEM footprint).
+
+The streamed inputs are fully IR-derived: the current level, the previous
+level iff `spec.time_order == 2`, and one stacked (A, ...) coefficient
+stream iff the op has array coefficients — no per-stencil branches.
 
 This realizes "optimal spatial blocking": code balance = word*(N_D+1) B/LUP.
 """
@@ -19,6 +23,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import ir
 from repro.core import stencils as st
 from repro.kernels import config
 
@@ -44,16 +49,17 @@ def _kernel(spec: st.StencilSpec, bz: int, n_in: int, scalars, *refs):
         cp.wait()
 
     w_cur = wins[0][...]
+    k = 1
+    w_prev = w_cur
     if spec.time_order == 2:
-        new = st.sweep_fn(spec)(w_cur, wins[1][...], (wins[2][...], scalars))
-    elif spec.n_coeff_arrays:
-        new = st.sweep_fn(spec)(w_cur, None, wins[1][...])
-    else:
-        new = st.sweep_fn(spec)(w_cur, None, scalars)
+        w_prev = wins[k][...]
+        k += 1
+    w_arr = wins[k][...] if spec.n_coeff_arrays else None
+    new = ir.make_sweep(spec)(w_cur, w_prev, w_arr, scalars)
     out_ref[...] = new[r:r + bz]
 
 
-def sweep_step(spec: st.StencilSpec, state, coeffs, *, bz: int = 8):
+def sweep_step(spec: st.StencilSpec, state, arrays, scalars, *, bz: int = 8):
     """One interior-update time step via the Pallas kernel: state -> state."""
     cur, prev = state
     r = spec.radius
@@ -66,22 +72,15 @@ def sweep_step(spec: st.StencilSpec, state, coeffs, *, bz: int = 8):
 
     cur_p = pad(cur)
     nyp, nxp = ny + 2 * r, nx + 2 * r
+    win = (bz + 2 * r, nyp, nxp)
     inputs = [cur_p]
-    win_shapes = [(bz + 2 * r, nyp, nxp)]
-    scalars = ()
+    win_shapes = [win]
     if spec.time_order == 2:
         inputs.append(pad(prev))
-        win_shapes.append((bz + 2 * r, nyp, nxp))
-        c_arr, c_vec = coeffs
-        inputs.append(pad(c_arr))
-        win_shapes.append((bz + 2 * r, nyp, nxp))
-        scalars = tuple(float(x) for x in c_vec)
-    elif spec.n_coeff_arrays:
-        k = spec.n_coeff_arrays
-        inputs.append(jnp.pad(coeffs, ((0, 0),) + pads, mode="edge"))
-        win_shapes.append((k, bz + 2 * r, nyp, nxp))
-    else:
-        scalars = tuple(float(x) for x in coeffs)
+        win_shapes.append(win)
+    if spec.n_coeff_arrays:
+        inputs.append(jnp.pad(arrays, ((0, 0),) + pads, mode="edge"))
+        win_shapes.append((spec.n_coeff_arrays,) + win)
 
     kern = functools.partial(_kernel, spec, bz, len(inputs), scalars)
     out = pl.pallas_call(
@@ -100,8 +99,9 @@ def sweep_step(spec: st.StencilSpec, state, coeffs, *, bz: int = 8):
     return (new, cur)
 
 
-def run_sweep(spec: st.StencilSpec, state, coeffs, n_steps: int, *, bz: int = 8):
+def run_sweep(spec: st.StencilSpec, state, arrays, scalars, n_steps: int, *,
+              bz: int = 8):
     """Advance n_steps as independent z-blocked single-sweep kernel passes."""
     for _ in range(n_steps):
-        state = sweep_step(spec, state, coeffs, bz=bz)
+        state = sweep_step(spec, state, arrays, scalars, bz=bz)
     return state

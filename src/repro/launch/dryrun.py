@@ -144,10 +144,17 @@ def probe_lm_cell(cfg, shape_name: str, mesh, *, chunk: int = 2048,
 
 def lower_girih_cell(arch: str, grid_name: str, mesh, *, t_block: int = 0,
                      hoisted: bool = False):
-    """Distributed deep-halo super-step for one stencil at production size."""
+    """Distributed deep-halo super-step for one stencil at production size.
+
+    `arch` is girih-<op> where <op> is anything repro.core.ir.resolve_op
+    accepts: a paper stencil, a registered custom op, or module.path:ATTR.
+    The coefficient ShapeDtypeStructs/shardings are IR-derived (the canonical
+    stacked-arrays + scalar-vector pair), so custom ops lower with no edits.
+    """
+    from repro.core import ir
     from repro.distributed import stepper
 
-    spec = stc.SPECS[arch.removeprefix("girih-")]
+    spec = ir.resolve_op(arch.removeprefix("girih-"))
     nz, ny, nx = GIRIH_GRIDS[grid_name]
     tb = t_block or (4 if spec.radius == 1 else 2)
     gs = stepper.GridSharding(mesh)
@@ -155,19 +162,9 @@ def lower_girih_cell(arch: str, grid_name: str, mesh, *, t_block: int = 0,
     sds3 = jax.ShapeDtypeStruct((nz, ny, nx), dt)
     if hoisted:
         coeff_sds = stepper.extended_coeff_sds(spec, mesh, (nz, ny, nx), tb)
-    elif spec.time_order == 2:
-        coeff_sds = (sds3, jax.ShapeDtypeStruct((5,), dt))
-    elif spec.n_coeff_arrays:
-        coeff_sds = jax.ShapeDtypeStruct((spec.n_coeff_arrays, nz, ny, nx),
-                                         dt)
     else:
-        coeff_sds = (jax.ShapeDtypeStruct((), dt),) * 2
-    if spec.time_order == 2:
-        coeff_sh = (gs.sharding(), NamedSharding(mesh, P()))
-    elif spec.n_coeff_arrays:
-        coeff_sh = gs.sharding(leading=1)
-    else:
-        coeff_sh = (NamedSharding(mesh, P()),) * 2
+        coeff_sds = stepper.coeff_sds(spec, (nz, ny, nx), dt)
+    coeff_sh = (gs.sharding(leading=1), NamedSharding(mesh, P()))
 
     with compat.set_mesh(mesh):
         step = stepper.make_super_step(spec, mesh, (nz, ny, nx), tb,
@@ -303,7 +300,11 @@ def iter_cells(arch_sel: str, shape_sel: str):
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="all",
-                    help="arch id, girih-<stencil>, or 'all'")
+                    help="arch id, girih-<stencil> (paper, registered custom "
+                         "op, or girih-module.path:ATTR), or 'all'")
+    ap.add_argument("--op-module", default=None,
+                    help="import this module first (it registers custom "
+                         "StencilOps via repro.core.ir.register)")
     ap.add_argument("--shape", default="all")
     ap.add_argument("--mesh", default="both", choices=["pod", "multipod",
                                                        "both"])
@@ -328,6 +329,9 @@ def main():
     ap.add_argument("--list", action="store_true")
     args = ap.parse_args()
 
+    if args.op_module:
+        import importlib
+        importlib.import_module(args.op_module)
     cells = list(iter_cells(args.arch, args.shape))
     if args.list:
         for arch, s, skip in cells:

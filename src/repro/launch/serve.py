@@ -45,19 +45,23 @@ def prefill_into_cache(cfg, params, tokens):
 def serve_stencil(name: str, grid, n_steps: int, n_requests: int):
     """Stencil-advance serving loop: one warm jitted MWD launch per request.
 
-    The MWD plan is resolved registry-first (repro.core.registry) so a
-    tuned deployment pays zero search/measurement at server start; on a
-    registry miss the model-scored auto-tuner picks the plan analytically.
+    `name` is any operator `repro.core.ir.resolve_op` knows: one of the four
+    paper stencils, a registered user-defined `StencilOp`, or a
+    ``module.path:ATTR`` import reference.  The MWD plan is resolved
+    registry-first (repro.core.registry, keyed by the op's structural
+    fingerprint) so a tuned deployment pays zero search/measurement at
+    server start; on a registry miss the model-scored auto-tuner picks the
+    plan analytically.
     """
-    from repro.core import registry, stencils as stc
+    from repro.core import ir, registry, stencils as stc
     from repro.kernels import ops
 
-    spec = stc.SPECS[name]
+    spec = ir.resolve_op(name)
     grid = grid or registry.default_grid(spec)
     state, coeffs = stc.make_problem(spec, grid, seed=0)
     word = state[0].dtype.itemsize
     plan, source = registry.resolve_plan(spec, grid, word_bytes=word)
-    print(f"serving {name} on {grid}: plan=dw{plan.d_w}.nf{plan.n_f}."
+    print(f"serving {spec.name} on {grid}: plan=dw{plan.d_w}.nf{plan.n_f}."
           f"{'fused' if plan.fused else 'row'} ({source})")
 
     state = ops.mwd(spec, state, coeffs, n_steps, plan=plan)  # compile/warm
@@ -81,9 +85,12 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b",
                     choices=list(configs.ARCH_IDS))
-    ap.add_argument("--stencil", default=None, choices=["7pt-const",
-                    "7pt-var", "25pt-const", "25pt-var"],
-                    help="serve stencil advances instead of an LM")
+    ap.add_argument("--stencil", default=None,
+                    help="serve stencil advances instead of an LM: a paper "
+                         "op, a registered custom op, or module.path:ATTR")
+    ap.add_argument("--op-module", default=None,
+                    help="import this module first (it registers custom "
+                         "StencilOps via repro.core.ir.register)")
     ap.add_argument("--grid", type=str, default=None,
                     help="Z,Y,X stencil grid (default: sanity scale)")
     ap.add_argument("--requests", type=int, default=8)
@@ -95,6 +102,9 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=32)
     args = ap.parse_args(argv)
 
+    if args.op_module:
+        import importlib
+        importlib.import_module(args.op_module)
     if args.stencil:
         grid = (tuple(int(x) for x in args.grid.split(",")) if args.grid
                 else None)

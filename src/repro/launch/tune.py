@@ -23,7 +23,7 @@ import argparse
 import time
 
 from repro import hw
-from repro.core import autotune, registry as reg
+from repro.core import autotune, ir, registry as reg
 from repro.core import stencils as st
 
 
@@ -77,8 +77,12 @@ def main(argv=None) -> list[dict]:
     ap = argparse.ArgumentParser(
         prog="python -m repro.launch.tune",
         description="Measured MWD auto-tuning with a persistent registry")
-    ap.add_argument("--stencil", action="append", choices=list(st.SPECS),
-                    help="stencil(s) to tune (default: all four)")
+    ap.add_argument("--stencil", action="append",
+                    help="stencil(s) to tune: paper op, registered custom "
+                         "op, or module.path:ATTR (default: all four)")
+    ap.add_argument("--op-module", default=None,
+                    help="import this module first (it registers custom "
+                         "StencilOps via repro.core.ir.register)")
     ap.add_argument("--grid", type=str, default=None,
                     help="Z,Y,X grid (default: per-stencil sanity scale)")
     ap.add_argument("--word-bytes", type=int, default=4)
@@ -97,9 +101,12 @@ def main(argv=None) -> list[dict]:
                     help="re-tune even on a registry hit")
     args = ap.parse_args(argv)
 
+    if args.op_module:
+        import importlib
+        importlib.import_module(args.op_module)
     registry = (reg.PlanRegistry(args.registry) if args.registry
                 else reg.default_registry())
-    specs = [st.SPECS[n] for n in (args.stencil or st.SPECS)]
+    specs = [ir.resolve_op(n) for n in (args.stencil or st.SPECS)]
     grid = (tuple(int(x) for x in args.grid.split(",")) if args.grid
             else None)
 

@@ -40,6 +40,24 @@ for name in st.SPECS:
     assert err < 1e-4, (name, err)
 print("stepper OK")
 
+# 1-custom. a user-defined StencilOp (not among the paper's four) runs the
+# same distributed path with zero edits: jnp super-steps AND the fused
+# MWD-kernel super-step both == single-device naive
+from repro.core import ir
+_taps = [ir.Tap(0, 0, 0, ir.array(0))]
+_taps += [ir.Tap(*o, ir.array(k + 1)) for k, o in enumerate(
+    [(-1, 0, 0), (1, 0, 0), (0, -1, 0), (0, 1, 0), (0, 0, -1), (0, 0, 1),
+     (0, -1, -1), (0, 1, 1)])]
+custom = ir.StencilOp("dist-custom9", tuple(_taps), coeff_scale=0.08)
+state, coeffs = st.make_problem(custom, (8, 8, 16), seed=5)
+want = st.run_naive(custom, state, coeffs, 4)
+for plan in (None, MWDPlan(d_w=2, n_f=1)):
+    got = stepper.run_distributed(custom, mesh, state, coeffs, 4, t_block=2,
+                                  plan=plan)
+    err = float(jnp.max(jnp.abs(want[0] - jax.device_get(got[0]))))
+    assert err < 1e-4, ("custom", plan, err)
+print("custom-op stepper OK")
+
 # 1a. MWD-kernel super-steps: ONE fused launch per halo exchange per device,
 #     both time orders, == naive
 for name in ("7pt-const", "25pt-const"):

@@ -1,0 +1,283 @@
+"""Stencil IR: derived analytics, generated-sweep bitwise equality,
+fingerprints, validation, and custom operators end-to-end."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, strategies as hst
+
+from repro.core import ir, listings, mwd, stencils as st
+from repro.core.mwd import MWDPlan
+from repro.kernels import ops
+
+# The hand-written paper listings, paired with their IR ops by the tests
+# only (no name-keyed dispatch anywhere in src/).
+REFERENCES = [
+    ("7pt-const", listings.sweep_7pt_const),
+    ("7pt-var", listings.sweep_7pt_var),
+    ("25pt-const", listings.sweep_25pt_const),
+    ("25pt-var", listings.sweep_25pt_var),
+]
+
+
+def _legacy_coeffs(spec, arrays, coeffs):
+    """The packed form the hand-written listings expect."""
+    if spec.name == "25pt-const":
+        return (arrays[0], coeffs[1])       # (C 3-D, scalar vector)
+    return coeffs
+
+
+# ---------------------------------------------------------------------------
+# Derived analytics == the paper's published figures
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,nd,flops,balance", [
+    ("7pt-const", 2, 7, 24), ("7pt-var", 9, 13, 80),
+    ("25pt-const", 3, 33, 32), ("25pt-var", 15, 37, 128)])
+def test_derived_analytics_match_paper(name, nd, flops, balance):
+    s = ir.OPS[name]
+    assert s.n_streams == nd
+    assert s.flops_per_lup == flops
+    assert s.spatial_code_balance(8) == balance
+
+
+@pytest.mark.parametrize("name,n_taps,n_arr,n_sca,radius", [
+    ("7pt-const", 7, 0, 2, 1), ("7pt-var", 7, 7, 0, 1),
+    ("25pt-const", 25, 1, 5, 4), ("25pt-var", 25, 13, 0, 4)])
+def test_derived_structure(name, n_taps, n_arr, n_sca, radius):
+    s = ir.OPS[name]
+    assert len(s.taps) == n_taps
+    assert s.n_coeff_arrays == n_arr
+    assert s.n_scalars == n_sca
+    assert s.radius == radius
+    assert s.radii == (radius,) * 3
+    assert s.bytes_per_cell == 2 + n_arr
+
+
+def test_per_axis_radius_anisotropic():
+    op = ir.StencilOp("aniso", (
+        ir.Tap(0, 0, 0, ir.const(0)),
+        ir.Tap(-2, 0, 0, ir.const(1)), ir.Tap(2, 0, 0, ir.const(1)),
+        ir.Tap(0, -1, 0, ir.const(1)), ir.Tap(0, 1, 0, ir.const(1)),
+        ir.Tap(0, 0, -3, ir.const(1)), ir.Tap(0, 0, 3, ir.const(1))))
+    assert op.radii == (2, 1, 3)
+    assert op.radius == 3
+
+
+# ---------------------------------------------------------------------------
+# Generated sweep == retained hand-written listings, bitwise
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,ref", REFERENCES)
+@pytest.mark.parametrize("seed", [0, 5])
+def test_generated_sweep_bitwise_equals_listing(name, ref, seed):
+    spec = ir.OPS[name]
+    shape = (11, 13, 12) if spec.radius == 1 else (11, 13, 12)
+    state, coeffs = st.make_problem(spec, shape, seed=seed)
+    arrays, scalars = ir.split_coeffs(spec, coeffs)
+    got = ir.make_sweep(spec)(state[0], state[1], arrays, scalars)
+    want = ref(state[0], state[1], _legacy_coeffs(spec, arrays, coeffs))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=hst.integers(0, 2**16), pick=hst.integers(0, 3),
+       shape=hst.sampled_from([(9, 11, 10), (10, 13, 12), (12, 10, 11)]))
+def test_generated_sweep_bitwise_property(seed, pick, shape):
+    name, ref = REFERENCES[pick]
+    spec = ir.OPS[name]
+    state, coeffs = st.make_problem(spec, shape, seed=seed)
+    arrays, scalars = ir.split_coeffs(spec, coeffs)
+    got = ir.make_sweep(spec)(state[0], state[1], arrays, scalars)
+    want = ref(state[0], state[1], _legacy_coeffs(spec, arrays, coeffs))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_split_join_roundtrip():
+    for name in ir.OPS:
+        spec = ir.OPS[name]
+        _, coeffs = st.make_problem(spec, (10, 11, 12), seed=1)
+        arrays, scalars = ir.split_coeffs(spec, coeffs)
+        if arrays is not None:
+            assert arrays.shape[0] == spec.n_coeff_arrays
+        assert len(scalars) == spec.n_scalars
+        again = ir.split_coeffs(spec, ir.join_coeffs(spec, arrays, scalars))
+        assert len(again[1]) == len(scalars)
+
+
+# ---------------------------------------------------------------------------
+# Fingerprints
+# ---------------------------------------------------------------------------
+
+def test_fingerprint_stable_and_structural():
+    a = ir.OPS["7pt-const"]
+    assert a.fingerprint == ir.OPS["7pt-const"].fingerprint
+    # the name and problem-generation hints do not change the fingerprint
+    renamed = dataclasses.replace(a, name="other", default_scalars=(1.0, 2.0))
+    assert renamed.fingerprint == a.fingerprint
+    # any tap change does
+    tweaked = dataclasses.replace(a, taps=a.taps[:-1] +
+                                  (ir.Tap(0, 0, 1, ir.const(0)),))
+    assert tweaked.fingerprint != a.fingerprint
+    # all four paper ops are distinct
+    fps = {ir.OPS[n].fingerprint for n in ir.OPS}
+    assert len(fps) == 4
+
+
+# ---------------------------------------------------------------------------
+# Validation
+# ---------------------------------------------------------------------------
+
+def test_validation_errors():
+    c0 = ir.const(0)
+    with pytest.raises(ValueError, match="at least one tap"):
+        ir.StencilOp("empty", ())
+    with pytest.raises(ValueError, match="duplicate"):
+        ir.StencilOp("dup", (ir.Tap(0, 0, 1, c0), ir.Tap(0, 0, 1, c0)))
+    with pytest.raises(ValueError, match="off-center"):
+        ir.StencilOp("center-only", (ir.Tap(0, 0, 0, c0),))
+    with pytest.raises(ValueError, match="contiguous"):
+        ir.StencilOp("gap", (ir.Tap(0, 0, 0, ir.const(2)),
+                             ir.Tap(0, 0, 1, c0)))
+    with pytest.raises(ValueError, match="2nd-order"):
+        ir.StencilOp("scale1", (ir.Tap(0, 0, 1, c0),), scale=ir.array(0))
+    with pytest.raises(ValueError, match="time_order"):
+        ir.StencilOp("to3", (ir.Tap(0, 0, 1, c0),), time_order=3)
+    with pytest.raises(ValueError):
+        ir.Coeff("weird", 0)
+
+
+# ---------------------------------------------------------------------------
+# Custom operators end-to-end (none of these are among the paper's four)
+# ---------------------------------------------------------------------------
+
+def _wave_r2_op():
+    """2nd-order-in-time R=2 star — the regression op for the killed
+    `spec.name == "25pt-const"` special case: time_order=2 handling must be
+    IR-driven, so this new op must flow like 25pt-const did."""
+    taps = [ir.Tap(0, 0, 0, ir.const(0))]
+    for d in (1, 2):
+        taps += [ir.Tap(*off, ir.const(d)) for off in
+                 [(-d, 0, 0), (d, 0, 0), (0, -d, 0), (0, d, 0),
+                  (0, 0, -d), (0, 0, d)]]
+    return ir.StencilOp("wave13-r2", tuple(taps), time_order=2,
+                        scale=ir.array(0),
+                        default_scalars=(0.1, 0.05, 0.02))
+
+
+def _var_to2_noscale_op():
+    """2nd-order op with NO scale stream and two coefficient arrays: a shape
+    the old hand-written dispatch could not express at all."""
+    taps = [ir.Tap(0, 0, 0, ir.array(0))]
+    c = ir.array(1)
+    taps += [ir.Tap(*off, c) for off in
+             [(-1, 0, 0), (1, 0, 0), (0, -1, 0), (0, 1, 0),
+              (0, 0, -1), (0, 0, 1)]]
+    return ir.StencilOp("wave7-var", tuple(taps), time_order=2,
+                        coeff_scale=0.05)
+
+
+@pytest.mark.parametrize("make_op", [_wave_r2_op, _var_to2_noscale_op])
+def test_custom_time_order2_ops_not_25pt_const(make_op):
+    """Satellite regression: time_order=2 buffer handling comes from the IR,
+    covering new 2nd-order ops that are not 25pt-const."""
+    spec = make_op()
+    assert spec.time_order == 2 and spec.name != "25pt-const"
+    shape = (8, 13, 10)
+    state, coeffs = st.make_problem(spec, shape, seed=2)
+    t_steps = 4
+    want = st.run_naive(spec, state, coeffs, t_steps)
+    d_w = 4 * spec.radius
+    got_exec = mwd.run_mwd(spec, state, coeffs, t_steps, MWDPlan(d_w=d_w))
+    assert float(jnp.max(jnp.abs(want[0] - got_exec[0]))) < 1e-4
+    assert float(jnp.max(jnp.abs(want[1] - got_exec[1]))) < 1e-4
+    got_kern = ops.mwd(spec, state, coeffs, t_steps, d_w=d_w, n_f=2)
+    assert float(jnp.max(jnp.abs(want[0] - got_kern[0]))) < 1e-4
+    assert float(jnp.max(jnp.abs(want[1] - got_kern[1]))) < 1e-4
+
+
+def test_custom_op_all_kernels_match_oracle():
+    """A custom 1st-order mixed-coefficient op (arrays AND scalars) through
+    every kernel entry point — a coefficient mix none of the paper's four
+    1st-order ops has."""
+    c = ir.array(0)
+    taps = [ir.Tap(0, 0, 0, ir.const(0))]
+    taps += [ir.Tap(*off, c) for off in
+             [(-1, 0, 0), (1, 0, 0), (0, -1, 0), (0, 1, 0)]]
+    taps += [ir.Tap(0, 0, -1, ir.const(1)), ir.Tap(0, 0, 1, ir.const(1))]
+    spec = ir.StencilOp("mixed7", tuple(taps),
+                        default_scalars=(0.3, 0.1), coeff_scale=0.1)
+    state, coeffs = st.make_problem(spec, (8, 12, 10), seed=3)
+    want = st.run_naive(spec, state, coeffs, 3)
+    for fn, kw in [(ops.spatial, dict(bz=4)),
+                   (ops.ghostzone, dict(t_block=2, bz=4, by=8)),
+                   (ops.mwd, dict(d_w=4, n_f=2, fused=True)),
+                   (ops.mwd, dict(d_w=4, n_f=2, fused=False))]:
+        got = fn(spec, state, coeffs, 3, **kw)
+        err = float(jnp.max(jnp.abs(want[0] - got[0])))
+        assert err < 5e-4, (fn, kw, err)
+
+
+def test_custom_op_auto_plan_caches_under_fingerprinted_key(tmp_path,
+                                                            monkeypatch):
+    """Acceptance: ops.mwd(plan="auto") on a custom op resolves a plan and
+    the measured-tuning CLI caches it under a fingerprint-bearing key."""
+    from benchmarks.run import CUSTOM_BOX
+    from repro.core import registry as reg
+    from repro.launch import tune
+
+    path = str(tmp_path / "plans.json")
+    monkeypatch.setenv(reg.ENV_VAR, path)
+    shape = (8, 12, 10)
+    state, coeffs = st.make_problem(CUSTOM_BOX, shape, seed=0)
+    want = st.run_naive(CUSTOM_BOX, state, coeffs, 3)
+    got = ops.mwd(CUSTOM_BOX, state, coeffs, 3, plan="auto")
+    assert float(jnp.max(jnp.abs(want[0] - got[0]))) < 1e-4
+
+    reports = tune.main(["--stencil", "benchmarks.run:CUSTOM_BOX",
+                         "--registry", path, "--grid", "8,12,10",
+                         "--model-only", "--max-evals", "6"])
+    assert reports[0]["stencil"] == "box19-var"
+    import json
+    keys = list(json.load(open(path))["plans"])
+    assert len(keys) == 1
+    assert f"box19-var@{CUSTOM_BOX.fingerprint}|" in keys[0]
+    # second run: pure cache hit, zero search
+    again = tune.main(["--stencil", "benchmarks.run:CUSTOM_BOX",
+                       "--registry", path, "--grid", "8,12,10",
+                       "--model-only"])
+    assert again[0]["source"] == "cached"
+
+
+def test_register_cannot_shadow_paper_ops():
+    with pytest.raises(ValueError, match="shadows the paper operator"):
+        ir.register(ir.StencilOp("7pt-const", (
+            ir.Tap(0, 0, 0, ir.const(0)), ir.Tap(0, 0, 1, ir.const(0)))))
+    # re-registering the structurally identical op is a harmless no-op,
+    # and built-ins always win resolution
+    ir.register(ir.OPS["7pt-const"])
+    assert ir.resolve_op("7pt-const") is ir.OPS["7pt-const"]
+
+
+def test_resolve_op_paths():
+    assert ir.resolve_op("7pt-var") is ir.OPS["7pt-var"]
+    op = ir.resolve_op("benchmarks.run:CUSTOM_BOX")
+    assert op.name == "box19-var"
+    assert ir.resolve_op("box19-var") is op       # auto-registered by name
+    assert "box19-var" in ir.available()
+    with pytest.raises(KeyError, match="unknown stencil"):
+        ir.resolve_op("no-such-op")
+    with pytest.raises(TypeError):
+        ir.resolve_op("repro.core.ir:OPS")        # not a StencilOp
+
+
+def test_serve_stencil_accepts_custom_op(capsys):
+    """launch.serve --stencil works for a registered custom op."""
+    from repro.launch import serve
+
+    op = ir.register(_wave_r2_op())
+    serve.serve_stencil(op.name, (8, 12, 10), n_steps=2, n_requests=2)
+    out = capsys.readouterr().out
+    assert "serving wave13-r2" in out and "served 2 requests" in out

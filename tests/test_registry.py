@@ -261,3 +261,48 @@ def test_fingerprint_stable_and_sensitive():
     assert hw.fingerprint() == hw.fingerprint()
     other = dataclasses.replace(hw.V5E, hbm_bw=hw.V5E.hbm_bw * 2)
     assert hw.fingerprint(other) != hw.fingerprint()
+
+
+def test_same_name_ops_do_not_collide(tmp_path):
+    """Two user-defined ops sharing a display name get distinct plan keys
+    (the key embeds the structural IR fingerprint)."""
+    from repro.core import ir
+
+    base = [ir.Tap(0, 0, 0, ir.const(0)),
+            ir.Tap(0, 0, -1, ir.const(1)), ir.Tap(0, 0, 1, ir.const(1))]
+    op_a = ir.StencilOp("custom", tuple(base))
+    op_b = ir.StencilOp("custom", tuple(base + [
+        ir.Tap(0, -1, 0, ir.const(1)), ir.Tap(0, 1, 0, ir.const(1))]))
+    assert op_a.fingerprint != op_b.fingerprint
+    assert reg.plan_key(op_a, GRID) != reg.plan_key(op_b, GRID)
+
+    r = reg.PlanRegistry(str(tmp_path / "plans.json"))
+    r.put(op_a, GRID, MWDPlan(d_w=4, n_f=1), 1.0)
+    r.put(op_b, GRID, MWDPlan(d_w=8, n_f=2), 2.0)
+    assert r.get(op_a, GRID).plan == MWDPlan(d_w=4, n_f=1)
+    assert r.get(op_b, GRID).plan == MWDPlan(d_w=8, n_f=2)
+
+
+def test_plan_key_rejects_bare_names():
+    """A bare name would persist under a key the next load() drops; refuse."""
+    with pytest.raises(TypeError, match="StencilOp"):
+        reg.plan_key("7pt-const", GRID)
+
+
+def test_legacy_name_only_keys_invalidated(tmp_path):
+    """Pre-IR registry files keyed by bare stencil name are dropped at load
+    (graceful invalidation: the entry re-tunes instead of colliding)."""
+    fp = hw.fingerprint()
+    path = tmp_path / "plans.json"
+    legacy_key = f"7pt-const|{GRID[0]}x{GRID[1]}x{GRID[2]}|w4|dx1"
+    good_key = reg.plan_key(SPEC, GRID)
+    entry = {"plan": {"d_w": 4, "n_f": 2}, "score": 1.0,
+             "source": "measured", "fingerprint": fp}
+    path.write_text(json.dumps({"version": reg.SCHEMA_VERSION, "plans": {
+        legacy_key: entry, good_key: dict(entry, score=2.0)}}))
+    r = reg.PlanRegistry(str(path))
+    assert len(r) == 1                      # legacy entry never loaded
+    got = r.get(SPEC, GRID)
+    assert got is not None and got.score == 2.0
+    r.save()                                # and the file is rewritten clean
+    assert list(json.load(open(path))["plans"]) == [good_key]
