@@ -40,8 +40,15 @@ def _plan_valid(spec: StencilSpec, plan: MWDPlan) -> bool:
 
 
 def model_score(spec: StencilSpec, grid_shape, word_bytes: int = 4,
-                chip: hw.ChipSpec = hw.V5E) -> Callable[[MWDPlan], float]:
-    """Default scorer: ECM-TPU predicted GLUP/s (per device)."""
+                chip: hw.ChipSpec = hw.V5E,
+                batch: int = 1) -> Callable[[MWDPlan], float]:
+    """Default scorer: ECM-TPU predicted GLUP/s (per device).
+
+    `batch` models the batched serving launch (`ops.mwd_batched`): one
+    dispatch advances `batch` independent grids, so the steady-state terms
+    scale by B while the dispatch cost is amortized to T_d/B per request
+    (`models.batch_amortized_time`). B=1 keeps the single-request model.
+    """
     nz, ny, nx = grid_shape
 
     def score(plan: MWDPlan) -> float:
@@ -69,15 +76,19 @@ def model_score(spec: StencilSpec, grid_shape, word_bytes: int = 4,
                 spec, plan.d_w, plan.n_f, (nz, ny, nx // plan.tg_x),
                 word_bytes)
             t_sync += (extra_b / chip.hbm_bw + models.T_DISPATCH_S) / h
-        return pred.lups / (pred.t_total + t_sync) / 1e9
+        # one fused launch advances all B grids: per-item steady-state work
+        # x B, ONE dispatch for the whole batch (B=1 degenerates to the
+        # single-request launch paying its own dispatch)
+        t = models.batch_amortized_time(pred.t_total + t_sync, batch)
+        return batch * pred.lups / t / 1e9
 
     return score
 
 
 def measure_score(spec: StencilSpec, grid_shape, word_bytes: int = 4,
                   chip: hw.ChipSpec = hw.V5E, *, n_steps: int = 4,
-                  reps: int = 3, warmup: int = 1,
-                  seed: int = 0) -> Callable[[MWDPlan], float]:
+                  reps: int = 3, warmup: int = 1, seed: int = 0,
+                  batch: int = 1) -> Callable[[MWDPlan], float]:
     """Measured scorer: wall-clock GLUP/s of the real `ops.mwd` launch.
 
     This is the paper's Fig. 7 measurement step: the candidate plan is
@@ -90,6 +101,11 @@ def measure_score(spec: StencilSpec, grid_shape, word_bytes: int = 4,
     The state is float32 (the container's measurement dtype); `word_bytes`
     only parameterizes the analytic VMEM prune. `tg_x > 1` plans are timed
     on this device's share of the grid, `nx // tg_x`.
+
+    `batch` > 1 times the batched serving launch instead: ONE
+    `ops.mwd_batched` call advancing `batch` independent problems, so the
+    winner persisted under the ``b<B>`` registry key is tuned on the launch
+    shape the server actually dispatches.
 
     The returned callable counts launches in its `measurements` attribute,
     which is how `repro.launch.tune` proves a registry hit measured nothing.
@@ -115,12 +131,19 @@ def measure_score(spec: StencilSpec, grid_shape, word_bytes: int = 4,
         if not models.vmem_fits(spec, plan.d_w, plan.n_f, n_xb, chip):
             return -math.inf
         if nx_l not in problems:
-            problems[nx_l] = st.make_problem(spec, (nz, ny, nx_l), seed=seed)
-        state, coeffs = problems[nx_l]
+            probs = [st.make_problem(spec, (nz, ny, nx_l), seed=seed + i)
+                     for i in range(batch)]
+            problems[nx_l] = ([p[0] for p in probs], [p[1] for p in probs])
+        states, coeffs = problems[nx_l]
 
         def launch():
-            out = ops.mwd(spec, state, coeffs, n_steps, d_w=plan.d_w,
-                          n_f=plan.n_f, fused=plan.fused)
+            if batch > 1:
+                out = ops.mwd_batched(spec, states, coeffs, n_steps,
+                                      d_w=plan.d_w, n_f=plan.n_f,
+                                      fused=plan.fused)
+            else:
+                out = ops.mwd(spec, states[0], coeffs[0], n_steps,
+                              d_w=plan.d_w, n_f=plan.n_f, fused=plan.fused)
             jax.block_until_ready(out)
             return out
 
@@ -132,7 +155,7 @@ def measure_score(spec: StencilSpec, grid_shape, word_bytes: int = 4,
             launch()
             times.append(_time.perf_counter() - t0)
         score.measurements += 1
-        lups = nz * ny * nx_l * n_steps
+        lups = nz * ny * nx_l * n_steps * batch
         return lups / float(np.median(times)) / 1e9
 
     score.measurements = 0
@@ -170,7 +193,8 @@ def _seed_d_w(spec: StencilSpec, n_xb: int, chip: hw.ChipSpec,
 def autotune(spec: StencilSpec, grid_shape, devices_x: int = 1,
              measure: Callable[[MWDPlan], float] | None = None,
              chip: hw.ChipSpec = hw.V5E, word_bytes: int = 4,
-             max_evals: int = 64, d_w_cap: int | None = None) -> TuneResult:
+             max_evals: int = 64, d_w_cap: int | None = None,
+             batch: int = 1) -> TuneResult:
     """Model-pruned local search for the best MWD plan (paper Fig. 7).
 
     `measure` scores candidates: `model_score` (analytic, the default) or
@@ -181,9 +205,15 @@ def autotune(spec: StencilSpec, grid_shape, devices_x: int = 1,
     `d_w_cap` bounds the diamond width the search may try; measured runs cap
     it at the grid's y extent so the seed (sized for VMEM, Eq. 3) cannot
     dwarf a sanity-scale problem.
+
+    `batch` > 1 tunes for the batched serving launch (`ops.mwd_batched`):
+    the default scorer amortizes the dispatch over B grids. It only
+    parameterizes the default `model_score`; an injected `measure` callback
+    is used as-is.
     """
     nz, ny, nx = grid_shape
-    measure = measure or model_score(spec, grid_shape, word_bytes, chip)
+    measure = measure or model_score(spec, grid_shape, word_bytes, chip,
+                                     batch)
     evaluated: dict[MWDPlan, float] = {}
 
     def eval_plan(plan: MWDPlan) -> float:

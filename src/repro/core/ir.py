@@ -322,6 +322,32 @@ def split_coeffs(op: StencilOp, coeffs):
     return arrays, scalars
 
 
+def split_coeffs_batch(op: StencilOp, coeffs_seq):
+    """Per-request packed coefficients -> per-item canonical streams.
+
+    Splits every item with `split_coeffs` and returns
+    ``(tuple_of_array_streams_or_None, shared_scalar_tuple)`` — the arrays
+    are left UNstacked so the caller can stack them inside a jit (one fused
+    stack+pad instead of B host-side dispatches).  Scalar coefficients are
+    compile-time constants the kernels inline, so every item of a batch
+    MUST share them — a mismatch raises instead of silently serving request
+    b with request 0's physics.
+    """
+    if not coeffs_seq:
+        raise ValueError(f"{op.name}: cannot stack an empty coefficient batch")
+    splits = [split_coeffs(op, c) for c in coeffs_seq]
+    scalars = tuple(float(x) for x in splits[0][1])
+    for i, (_, sc) in enumerate(splits[1:], start=1):
+        if tuple(float(x) for x in sc) != scalars:
+            raise ValueError(
+                f"{op.name}: batch item {i} has scalar coefficients "
+                f"{tuple(float(x) for x in sc)} != item 0's {scalars}; "
+                "scalars are compile-time constants, so a batch bucket must "
+                "share them")
+    arrays = (tuple(a for a, _ in splits) if op.n_coeff_arrays else None)
+    return arrays, scalars
+
+
 def join_coeffs(op: StencilOp, arrays, scalars):
     """Canonical ``(arrays, scalars)`` -> the op's packed convention."""
     if op.n_coeff_arrays and op.n_scalars:

@@ -79,6 +79,32 @@ def spatial_code_balance(spec: StencilSpec, word_bytes: int = 8) -> float:
 T_DISPATCH_S = 5e-6
 
 
+def batch_amortized_time(t_item_s: float, batch: int,
+                         t_dispatch_s: float = T_DISPATCH_S) -> float:
+    """Wall time of ONE fused launch advancing `batch` independent grids.
+
+    The B grids of a serving batch share no data, so the steady-state terms
+    (compute, VMEM, HBM — the arithmetic-intensity part of the model) scale
+    linearly with B; the host dispatch is paid ONCE instead of once per
+    request. This is the batched-serving analogue of the paper's intra-tile
+    sharing argument: the shared resource here is the launch itself, and the
+    per-request overhead drops from T_d to T_d/B.  Sequential serving of the
+    same B requests costs ``batch * (t_item_s + t_dispatch_s)``.
+    """
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    return batch * t_item_s + t_dispatch_s
+
+
+def batch_amortization(t_item_s: float, batch: int,
+                       t_dispatch_s: float = T_DISPATCH_S) -> float:
+    """Modeled throughput multiplier of one B-batch launch over B sequential
+    launches: ``B*(t + T_d) / (B*t + T_d)`` — >= 1, -> 1 as t dominates and
+    -> B as the dispatch dominates (tiny per-request grids)."""
+    return (batch * (t_item_s + t_dispatch_s)
+            / batch_amortized_time(t_item_s, batch, t_dispatch_s))
+
+
 def mwd_tile_bytes(spec: StencilSpec, d_w: int, n_f: int, nz: int, nx: int,
                    word_bytes: int = 4) -> float:
     """Exact DMA bytes ONE tile moves over its full wavefront sweep.

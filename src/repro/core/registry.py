@@ -8,7 +8,7 @@ benchmarks — resolves the stored plan in O(1) and performs zero measurements.
 Registry layout (one JSON file, human-diffable):
 
     {"version": 1,
-     "plans": {"<stencil>@<ir fingerprint>|<nz>x<ny>x<nx>|w<word>|dx<dx>": {
+     "plans": {"<stencil>@<ir fp>|<nz>x<ny>x<nx>|w<word>|dx<dx>|b<batch>": {
          "plan": {"d_w": 16, "n_f": 2, "tg_x": 1, "fused": true, ...},
          "score": 12.3, "source": "measured", "evals": 14,
          "fingerprint": "<hw.fingerprint() at tune time>"}}}
@@ -18,7 +18,10 @@ a lookup under a different fingerprint treats the entry as stale (dropped on
 the next save) so a registry file carried to new hardware silently re-tunes
 instead of replaying a wrong plan.  Keys embed the operator's structural IR
 fingerprint; legacy name-only keys (pre-IR files) are dropped at load, so a
-stale cache re-tunes gracefully instead of colliding. Lookups that miss fall back to the
+stale cache re-tunes gracefully instead of colliding, and pre-batch keys
+missing the trailing ``b<B>`` segment are upgraded to ``b1`` at load (a
+single-grid plan keeps working; batched serving buckets get their own
+entries). Lookups that miss fall back to the
 analytic model score (`autotune.model_score`) — fast, measurement-free —
 and the fallback is memoized per process but never persisted: only the
 deliberate `python -m repro.launch.tune` run writes measured entries.
@@ -53,7 +56,7 @@ def default_grid(spec: StencilSpec) -> tuple[int, int, int]:
 
 
 def plan_key(spec: StencilSpec, grid_shape, word_bytes: int = 4,
-             devices_x: int = 1) -> str:
+             devices_x: int = 1, batch: int = 1) -> str:
     """Registry key of one tuning problem (hw fingerprint lives in the entry).
 
     The stencil segment is ``name@<structural fingerprint>`` so two
@@ -61,14 +64,22 @@ def plan_key(spec: StencilSpec, grid_shape, word_bytes: int = 4,
     cache.  Only `StencilOp`s are accepted: a bare name would produce the
     legacy fingerprint-less key that `_load` discards, silently losing the
     entry on the next start.
+
+    The trailing ``b<B>`` segment is the batch axis of the batched serving
+    launch (`ops.mwd_batched`): a plan tuned for ONE grid is not the plan
+    for B resident grids (the dispatch amortization shifts the optimum), so
+    batched entries must never collide with B=1 entries.  Legacy keys
+    without the segment are upgraded to ``b1`` at load (`_load`).
     """
     if isinstance(spec, str):
         raise TypeError("plan_key needs a StencilOp (a bare name has no "
                         "structural fingerprint); resolve it via "
                         "repro.core.ir.resolve_op first")
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
     nz, ny, nx = grid_shape
     return f"{spec.name}@{spec.fingerprint}|{nz}x{ny}x{nx}|w{word_bytes}" \
-           f"|dx{devices_x}"
+           f"|dx{devices_x}|b{batch}"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -147,6 +158,10 @@ class PlanRegistry:
             if "@" not in key.split("|", 1)[0]:
                 continue            # legacy name-only key (pre-IR schema):
                                     # no fingerprint -> silently invalidated
+            tail = key.rsplit("|", 1)[-1]
+            if not (tail.startswith("b") and tail[1:].isdigit()):
+                key += "|b1"        # pre-batch schema: a key without the
+                                    # b<B> segment is a single-grid plan
             try:
                 self._entries[key] = RegistryEntry.from_dict(d)
             except (ValueError, KeyError, TypeError):
@@ -174,14 +189,14 @@ class PlanRegistry:
         return len(self._entries)
 
     def get(self, spec: StencilSpec, grid_shape, word_bytes: int = 4,
-            devices_x: int = 1,
+            devices_x: int = 1, batch: int = 1,
             fingerprint: str | None = None) -> RegistryEntry | None:
         """Cached entry for the problem, or None on miss / stale fingerprint.
 
         A stale entry (recorded fingerprint != the current one) is removed
         from the in-memory map so the next `save()` prunes it from disk.
         """
-        key = plan_key(spec, grid_shape, word_bytes, devices_x)
+        key = plan_key(spec, grid_shape, word_bytes, devices_x, batch)
         entry = self._entries.get(key)
         if entry is None:
             return None
@@ -196,7 +211,7 @@ class PlanRegistry:
 
     def put(self, spec: StencilSpec, grid_shape, plan: MWDPlan,
             score: float, *, source: str = "measured", evals: int = 0,
-            word_bytes: int = 4, devices_x: int = 1,
+            word_bytes: int = 4, devices_x: int = 1, batch: int = 1,
             fingerprint: str | None = None,
             persist: bool = True) -> RegistryEntry:
         """Record a tuned plan and (by default) write the file through."""
@@ -205,13 +220,13 @@ class PlanRegistry:
                               fingerprint=fingerprint or hw.fingerprint(),
                               evals=evals)
         self._entries[plan_key(spec, grid_shape, word_bytes,
-                               devices_x)] = entry
+                               devices_x, batch)] = entry
         if persist:
             self.save()
         return entry
 
     def resolve(self, spec: StencilSpec, grid_shape, word_bytes: int = 4,
-                devices_x: int = 1,
+                devices_x: int = 1, batch: int = 1,
                 chip: hw.ChipSpec = hw.V5E) -> tuple[MWDPlan, str]:
         """Plan for the problem: registry-first, model-scored fallback.
 
@@ -219,18 +234,23 @@ class PlanRegistry:
         "registry:model" on a cache hit (echoing how the entry was tuned)
         and "model" for the analytic fallback (memoized per process, not
         persisted — run `python -m repro.launch.tune` to tune and persist).
+
+        `batch` > 1 resolves under the batched ``b<B>`` key and scores the
+        fallback with the batch-amortized dispatch model (`models`/
+        `autotune`), so a batched serving bucket gets a plan tuned for ONE
+        launch advancing B grids rather than replaying the B=1 optimum.
         """
-        entry = self.get(spec, grid_shape, word_bytes, devices_x)
+        entry = self.get(spec, grid_shape, word_bytes, devices_x, batch)
         if entry is not None:
             return entry.plan, f"registry:{entry.source}"
-        key = plan_key(spec, grid_shape, word_bytes, devices_x)
+        key = plan_key(spec, grid_shape, word_bytes, devices_x, batch)
         if key not in self._memo:
             from repro.core import autotune
             # cap D_w at the y extent: a diamond wider than the domain only
             # inflates the launch padding, never the score
             res = autotune.autotune(spec, grid_shape, devices_x=devices_x,
                                     chip=chip, word_bytes=word_bytes,
-                                    d_w_cap=grid_shape[1])
+                                    d_w_cap=grid_shape[1], batch=batch)
             self._memo[key] = (_sanitize(res.plan), "model")
         return self._memo[key]
 
@@ -251,8 +271,8 @@ def default_registry() -> PlanRegistry:
 
 
 def resolve_plan(spec: StencilSpec, grid_shape, word_bytes: int = 4,
-                 devices_x: int = 1,
+                 devices_x: int = 1, batch: int = 1,
                  chip: hw.ChipSpec = hw.V5E) -> tuple[MWDPlan, str]:
     """Module-level convenience: `default_registry().resolve(...)`."""
     return default_registry().resolve(spec, grid_shape, word_bytes,
-                                      devices_x, chip)
+                                      devices_x, batch, chip)

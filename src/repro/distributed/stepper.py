@@ -231,6 +231,45 @@ def make_coeff_extender(spec: st.StencilSpec, mesh: jax.sharding.Mesh,
     return jax.jit(fn)
 
 
+def local_extended_shape(spec: st.StencilSpec, mesh, grid_shape,
+                         t_block: int) -> tuple[int, int, int]:
+    """Shape of the extended local block ONE device's MWD kernel launches on.
+
+    The fused super-step runs the kernel on each shard's halo-extended block
+    — local extent plus the deep halo g = R * t_block on z and y and the
+    edge-padded g on x — NOT on the global grid.  Plan resolution must key
+    on this shape: a plan tuned for the global grid can prescribe a diamond
+    width larger than the shard's whole y extent.
+    """
+    gs = GridSharding(mesh)
+    g = spec.radius * t_block
+    nz, ny, nx = grid_shape
+    n_z = 1
+    for a in gs.z_axes:
+        n_z *= mesh.shape[a]
+    n_y = mesh.shape[gs.y_axis]
+    return (nz // n_z + 2 * g, ny // n_y + 2 * g, nx + 2 * g)
+
+
+def cap_plan_d_w(spec: st.StencilSpec, plan: MWDPlan, ny_local: int) -> MWDPlan:
+    """Clamp a plan's diamond width to a shard's y extent.
+
+    A D_w wider than the local block only inflates the launch padding (the
+    kernel pads y by 2*D_w + R per side) without ever tiling anything — the
+    global-grid optimum is meaningless on a shard a fraction its height.
+    Returns a kernel-valid plan: D_w a multiple of 2R capped at `ny_local`,
+    N_F re-clamped to divide it.
+    """
+    step = 2 * spec.radius
+    cap = max(step, ny_local // step * step)
+    if plan.d_w <= cap:
+        return plan
+    n_f = min(max(plan.n_f, 1), cap)
+    while cap % n_f:
+        n_f -= 1
+    return dataclasses.replace(plan, d_w=cap, n_f=n_f)
+
+
 def canonical_coeffs(spec: st.StencilSpec, coeffs, grid_shape, dtype):
     """Packed coefficients -> the canonical (stacked arrays, scalar vector).
 
@@ -279,17 +318,37 @@ def run_distributed(spec: st.StencilSpec, mesh, state, coeffs, n_steps: int,
 
     plan: run each super-step as one fused MWD kernel launch per device
     (see make_super_step) instead of t_block jnp sweeps. Pass "auto" to
-    resolve the tuned plan for (spec, global grid, hardware) registry-first
-    from repro.core.registry (model-scored fallback on a miss) — repeat
-    runs after one `python -m repro.launch.tune` skip the search entirely."""
+    resolve the tuned plan registry-first from repro.core.registry
+    (model-scored fallback on a miss) — repeat runs after one
+    `python -m repro.launch.tune` skip the search entirely. The plan is
+    resolved against the PER-SHARD extended block shape the kernel actually
+    launches on (see `local_extended_shape`), with the mesh's real x-axis
+    device count, and its D_w is capped at the shard's y extent; an
+    explicit `MWDPlan` whose D_w exceeds the local y extent is rejected."""
     gs = GridSharding(mesh)
     cur, prev = state
+    shape_e = local_extended_shape(spec, mesh, cur.shape, t_block)
     if isinstance(plan, str):
         if plan != "auto":
             raise ValueError(f"plan must be an MWDPlan or 'auto', got {plan!r}")
         from repro.core import registry
+        # the kernel runs on each shard's halo-extended local block, so the
+        # tuned plan is keyed on that shape — NOT the global grid, whose
+        # optimum can be wider than the whole shard. GridSharding never
+        # shards grid-x, so devices_x is 1 on every mesh this stepper
+        # builds; the lookup (rather than a hard-coded 1) keeps the key
+        # honest if a future mesh adds an explicit "x" axis
+        devices_x = mesh.shape.get("x", 1)
         plan, _source = registry.resolve_plan(
-            spec, cur.shape, word_bytes=cur.dtype.itemsize, devices_x=1)
+            spec, shape_e, word_bytes=cur.dtype.itemsize,
+            devices_x=devices_x)
+        plan = cap_plan_d_w(spec, plan, shape_e[1])
+    elif plan is not None and plan.d_w > shape_e[1]:
+        raise ValueError(
+            f"plan d_w={plan.d_w} exceeds the per-shard extended y extent "
+            f"{shape_e[1]} (global ny={cur.shape[1]} over "
+            f"{mesh.shape[gs.y_axis]} shards); tune against "
+            f"local_extended_shape() or pass plan='auto'")
     prev = (jax.device_put(prev, gs.sharding()) if spec.time_order == 2
             else jax.device_put(cur, gs.sharding()))
     cur = jax.device_put(cur, gs.sharding())

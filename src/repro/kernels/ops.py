@@ -18,6 +18,7 @@ from __future__ import annotations
 from functools import partial
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import ir
 from repro.core.mwd import MWDPlan
@@ -28,15 +29,17 @@ from repro.kernels import stencil_fused, stencil_mwd, stencil_sweep
 ref = _ref
 
 
-def resolve_plan(spec: StencilSpec, state, plan) -> MWDPlan:
+def resolve_plan(spec: StencilSpec, state, plan, batch: int = 1) -> MWDPlan:
     """Turn `ops.mwd`'s `plan=` argument into a concrete `MWDPlan`.
 
     `plan` may be an `MWDPlan` (used as-is) or the string "auto", which
     resolves registry-first against the persistent tuned-plan cache
     (`repro.core.registry`) keyed by the operator's structural fingerprint,
-    grid shape, word size, and the hardware fingerprint — falling back to the
-    analytic model-scored auto-tuner on a miss. Single-device launches
-    resolve with devices_x=1.
+    grid shape, word size, batch size, and the hardware fingerprint —
+    falling back to the analytic model-scored auto-tuner on a miss.
+    Single-device launches resolve with devices_x=1; `batch` > 1 selects the
+    ``b<B>`` key segment so tuned batched plans never collide with B=1
+    entries.
     """
     if isinstance(plan, MWDPlan):
         return plan
@@ -45,8 +48,9 @@ def resolve_plan(spec: StencilSpec, state, plan) -> MWDPlan:
     from repro.core import registry
     cur = state[0]
     word = cur.dtype.itemsize
-    resolved, _source = registry.resolve_plan(spec, cur.shape,
-                                              word_bytes=word, devices_x=1)
+    resolved, _source = registry.resolve_plan(spec, cur.shape[-3:],
+                                              word_bytes=word, devices_x=1,
+                                              batch=batch)
     return resolved
 
 
@@ -108,6 +112,70 @@ def mwd(spec: StencilSpec, state, coeffs, n_steps: int,
         d_w, n_f, fused = p.d_w, p.n_f, p.fused
     arrays, scalars = _split_coeffs(spec, coeffs)
     return _mwd(spec, state, arrays, scalars, n_steps, d_w, n_f, fused)
+
+
+@partial(jax.jit, static_argnames=("spec", "scalars", "n_steps", "d_w", "n_f",
+                                   "fused"))
+def _mwd_batched(spec, state, arrays, scalars, n_steps, d_w, n_f, fused):
+    # per-item inputs arrive as tuples (pytrees) and stack INSIDE the jit:
+    # XLA fuses the stack with the launch padding, so the host pays one
+    # dispatch for the whole batch instead of B small stacking ops
+    cur, prev = state
+    if isinstance(cur, tuple):
+        cur, prev = jnp.stack(cur), jnp.stack(prev)
+    if isinstance(arrays, tuple):
+        arrays = jnp.stack(arrays)
+    return stencil_mwd.mwd_run_batched(spec, (cur, prev), arrays, scalars,
+                                       n_steps, d_w=d_w, n_f=n_f, fused=fused)
+
+
+def mwd_batched(spec: StencilSpec, states, coeffs, n_steps: int,
+                d_w: int = 8, n_f: int = 2, fused: bool = True,
+                plan: MWDPlan | str | None = None):
+    """Advance B independent same-shaped grids in ONE fused MWD launch.
+
+    `states` is either a sequence of B per-request ``(cur, prev)`` pairs or
+    an already-stacked pair of ``(B, nz, ny, nx)`` arrays; `coeffs` is a
+    **list** of B per-request packed coefficients (validated by
+    `ir.split_coeffs_batch` and stacked inside the jit — array streams
+    batch, scalars must be shared since the kernel inlines them as
+    compile-time constants) or one packed set applied to every request
+    (anything that is not a list, e.g. the scalar tuple of a
+    const-coefficient op).  Returns batched ``(cur, prev)`` arrays.
+
+    The result is bitwise-equal to a per-item `ops.mwd` loop: the batched
+    grid runs entry b's exact B=1 instruction sequence before entry b+1,
+    but pays one dispatch + one trace for the whole batch — the serving
+    lever (`launch.serve --stencil`) that turns B kernel round-trips into
+    one.
+
+    plan: an `MWDPlan` or "auto"; "auto" resolves registry-first under the
+    batched ``b<B>`` plan key (see `repro.core.registry.plan_key`).
+    """
+    if (isinstance(states, (tuple, list)) and len(states) == 2
+            and getattr(states[0], "ndim", 0) == 4):
+        cur, prev = states
+        b, grid_shape, dtype = cur.shape[0], cur.shape[1:], cur.dtype
+    else:
+        cur = tuple(s[0] for s in states)   # stacked inside the jit
+        prev = tuple(s[1] for s in states)
+        b, grid_shape, dtype = len(cur), cur[0].shape, cur[0].dtype
+    if plan is not None:
+        p = resolve_plan(spec, (jax.ShapeDtypeStruct(grid_shape, dtype),),
+                         plan, batch=b)
+        d_w, n_f, fused = p.d_w, p.n_f, p.fused
+    if isinstance(coeffs, list):        # per-request packed coefficients
+        if len(coeffs) != b:
+            raise ValueError(f"{spec.name}: got {len(coeffs)} coefficient "
+                             f"sets for a batch of {b}")
+        arrays, scalars = ir.split_coeffs_batch(spec, coeffs)
+    else:                       # one packed set shared by the whole batch
+        arrays, scalars = ir.split_coeffs(spec, coeffs)
+        if arrays is not None:
+            arrays = tuple(arrays for _ in range(b))
+        scalars = tuple(float(x) for x in scalars)
+    return _mwd_batched(spec, (cur, prev), arrays, scalars, n_steps,
+                        d_w, n_f, fused)
 
 
 @partial(jax.jit, static_argnames=("spec", "n_steps"))

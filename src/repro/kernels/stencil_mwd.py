@@ -52,16 +52,22 @@ from repro.kernels import config
 
 
 def sync_dirichlet_frame(cur, prev, r: int):
-    """Copy cur's boundary frame into prev (all levels share the frame)."""
+    """Copy cur's boundary frame into prev (all levels share the frame).
+
+    Operates on the trailing (z, y, x) axes, so a leading batch axis — the
+    batched serving path stacks B independent grids — passes through.
+    """
     for ax in range(3):
-        lo = tuple(slice(None) if a != ax else slice(0, r) for a in range(3))
-        hi = tuple(slice(None) if a != ax else slice(-r, None) for a in range(3))
+        lo = (...,) + tuple(slice(None) if a != ax else slice(0, r)
+                            for a in range(3))
+        hi = (...,) + tuple(slice(None) if a != ax else slice(-r, None)
+                            for a in range(3))
         prev = prev.at[lo].set(cur[lo]).at[hi].set(cur[hi])
     return prev
 
 
 def _mwd_kernel(spec: st.StencilSpec, d_w: int, n_f: int, scalars,
-                n_in: int, fused: bool, *refs):
+                n_in: int, fused: bool, batched: bool, *refs):
     """One (row, tile, j) grid step of the MWD schedule.
 
     refs = (bounds, p0s, w0, y0s, y1s, active,      # scalar prefetch
@@ -73,6 +79,13 @@ def _mwd_kernel(spec: st.StencilSpec, d_w: int, n_f: int, scalars,
     fused=True streams from / emits to the aliased output refs, keeping both
     parity grids resident across rows; fused=False reproduces the legacy
     per-row pass (separate in/out grids, inactive edge tiles not skipped).
+
+    batched=True prepends a batch grid axis: grid (batch, row, tile, j), the
+    HBM parity grids and coefficient stream carry a leading B axis, and every
+    HBM-side DMA indexes the current batch entry. The VMEM window scratch is
+    batch-free — the grid is sequential, so one live window serves every
+    entry — and per-entry dataflow is identical to the B=1 kernel, which is
+    what makes the batched launch bitwise-equal to a per-item loop.
     """
     bounds_ref, p0_ref, w0_ref, y0_ref, y1_ref, act_ref = refs[:6]
     inputs = refs[6:6 + n_in]
@@ -83,7 +96,10 @@ def _mwd_kernel(spec: st.StencilSpec, d_w: int, n_f: int, scalars,
     r = spec.radius
     t_steps = d_w // r                  # T = 2H updates per tile
     z_ws = n_f + r * t_steps + r        # live window thickness
-    row, k, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    nb = 1 if batched else 0
+    row, k, j = (pl.program_id(nb), pl.program_id(nb + 1),
+                 pl.program_id(nb + 2))
+    bsel = (pl.program_id(0),) if batched else ()
     w0 = w0_ref[row, k]
     # fused: the parity grids are read back through the output refs so every
     # row sees the previous row's in-place writes within the single launch
@@ -103,11 +119,11 @@ def _mwd_kernel(spec: st.StencilSpec, d_w: int, n_f: int, scalars,
                 b[:, 0:z_ws - n_f] = b[:, n_f:z_ws]
         wy = bufs[0].shape[-2]
         for src, dst in zip(srcs, bufs):
-            if len(src.shape) == 3:
-                idx = (pl.ds(j * n_f, n_f), pl.ds(w0, wy))
+            if len(dst.shape) == 3:       # solution window (scratch is 3-D)
+                idx = bsel + (pl.ds(j * n_f, n_f), pl.ds(w0, wy))
                 didx = (pl.ds(z_ws - n_f, n_f),)
-            else:
-                idx = (slice(None), pl.ds(j * n_f, n_f), pl.ds(w0, wy))
+            else:                         # stacked coefficient window
+                idx = bsel + (slice(None), pl.ds(j * n_f, n_f), pl.ds(w0, wy))
                 didx = (slice(None), pl.ds(z_ws - n_f, n_f))
             cp = pltpu.make_async_copy(src.at[idx], dst.at[didx], sem)
             cp.start()
@@ -161,7 +177,8 @@ def _mwd_kernel(spec: st.StencilSpec, d_w: int, n_f: int, scalars,
             for out, b in ((out_e, bufs[0]), (out_o, bufs[1])):
                 cp = pltpu.make_async_copy(
                     b.at[pl.ds(r, n_f), pl.ds(r, d_w)],
-                    out.at[pl.ds(zs, n_f), pl.ds(w0 + r, d_w)], osem)
+                    out.at[bsel + (pl.ds(zs, n_f), pl.ds(w0 + r, d_w))],
+                    osem)
                 cp.start()
                 cp.wait()
 
@@ -196,13 +213,49 @@ def mwd_run(spec: st.StencilSpec, state, arrays, scalars, n_steps: int, *,
     interior [R, ny-R). The distributed stepper passes (0, ny) so halo cells
     advance intermediate levels too.
     """
+    return _mwd_run_impl(spec, state, arrays, scalars, n_steps, d_w=d_w,
+                         n_f=n_f, fused=fused, interior=interior,
+                         y_domain=y_domain, batched=False)
+
+
+def mwd_run_batched(spec: st.StencilSpec, state, arrays, scalars,
+                    n_steps: int, *, d_w: int = 8, n_f: int = 2,
+                    fused: bool = True):
+    """Advance B independent same-shaped grids in ONE launch: state -> state.
+
+    `state` is (cur, prev) with a leading batch axis ``(B, nz, ny, nx)``;
+    `arrays` is the stacked coefficient stream with a leading batch axis
+    ``(B, A, nz, ny, nx)`` (or None); `scalars` is ONE static scalar tuple
+    shared by every entry (the kernel inlines scalars as compile-time
+    constants, so a serving bucket must share them — the queue keys on the
+    op fingerprint + scalars to guarantee it).
+
+    The launch extends the compiled-schedule grid to (batch, row, tile, j)
+    with the batch axis outermost: entry b runs the exact B=1 instruction
+    sequence before entry b+1 starts, so the result is bitwise-equal to a
+    per-item `mwd_run` loop while paying ONE dispatch + one jit trace for
+    the whole batch.
+    """
+    cur = state[0]
+    if cur.ndim != 4:
+        raise ValueError(f"mwd_run_batched wants (B, nz, ny, nx) states, "
+                         f"got shape {cur.shape}")
+    return _mwd_run_impl(spec, state, arrays, scalars, n_steps, d_w=d_w,
+                         n_f=n_f, fused=fused, interior=None, y_domain=None,
+                         batched=True)
+
+
+def _mwd_run_impl(spec: st.StencilSpec, state, arrays, scalars, n_steps: int,
+                  *, d_w: int, n_f: int, fused: bool, interior, y_domain,
+                  batched: bool):
     r = spec.radius
     if d_w % (2 * r) or d_w % n_f:
         raise ValueError(f"need 2R | d_w and n_f | d_w (d_w={d_w}, R={r}, "
                          f"n_f={n_f})")
     cur, prev = state
     prev = sync_dirichlet_frame(cur, prev, r)
-    nz, ny, nx = cur.shape
+    nz, ny, nx = cur.shape[-3:]
+    lead = cur.shape[:-3]                # (B,) when batched, () otherwise
     t_steps = d_w // r
     z_ws = n_f + r * t_steps + r
     pz, px = r, r
@@ -213,14 +266,14 @@ def mwd_run(spec: st.StencilSpec, state, arrays, scalars, n_steps: int, *,
     pads = ((pz, nz_tot - nz - pz), (py, py), (px, px))
 
     def pad(a):
-        return jnp.pad(a, pads, mode="edge")
+        return jnp.pad(a, ((0, 0),) * (a.ndim - 3) + pads, mode="edge")
 
     bufs = [pad(cur), pad(prev)]         # parity 0 (even), parity 1 (odd)
     win = (z_ws, d_w + 2 * r, nxp)
     scratch = [pltpu.VMEM(win, cur.dtype), pltpu.VMEM(win, cur.dtype)]
     coeff_in = []
     if spec.n_coeff_arrays:
-        coeff_in = [jnp.pad(arrays, ((0, 0),) + pads, mode="edge")]
+        coeff_in = [pad(arrays)]
         scratch.append(pltpu.VMEM((spec.n_coeff_arrays,) + win, cur.dtype))
     scalars = tuple(float(x) for x in scalars)
     scratch += [pltpu.SemaphoreType.DMA, pltpu.SemaphoreType.DMA]
@@ -240,17 +293,17 @@ def mwd_run(spec: st.StencilSpec, state, arrays, scalars, n_steps: int, *,
     y1p = jnp.asarray(comp.y1 + py, jnp.int32)
     act = jnp.asarray(comp.active, jnp.int32)
 
-    out_sds = jax.ShapeDtypeStruct((nz_tot, nyp, nxp), cur.dtype)
+    out_sds = jax.ShapeDtypeStruct(lead + (nz_tot, nyp, nxp), cur.dtype)
     n_in = 2 + len(coeff_in)
 
     def launch(fused_mode, tables, n_rows, bufs_in, aliases):
         kern = functools.partial(_mwd_kernel, spec, d_w, n_f, scalars,
-                                 n_in, fused_mode)
+                                 n_in, fused_mode, batched)
         return pl.pallas_call(
             kern,
             grid_spec=pltpu.PrefetchScalarGridSpec(
                 num_scalar_prefetch=6,
-                grid=(n_rows, comp.n_tiles, n_j),
+                grid=lead + (n_rows, comp.n_tiles, n_j),
                 in_specs=[pl.BlockSpec(memory_space=pl.ANY)] * n_in,
                 out_specs=(pl.BlockSpec(memory_space=pl.ANY),) * 2,
                 scratch_shapes=scratch,
@@ -271,6 +324,6 @@ def mwd_run(spec: st.StencilSpec, state, arrays, scalars, n_steps: int, *,
                       y1p[i:i + 1], act[i:i + 1])
             bufs = list(launch(False, tables, 1, bufs, {}))
 
-    core = (slice(pz, pz + nz), slice(py, py + ny), slice(px, px + nx))
+    core = (..., slice(pz, pz + nz), slice(py, py + ny), slice(px, px + nx))
     p = n_steps % 2
     return bufs[p][core], bufs[1 - p][core]

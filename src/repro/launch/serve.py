@@ -3,19 +3,26 @@
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m --reduced \
       --batch 4 --prompt-len 32 --gen 32
 
-Also serves the paper's stencil workload directly: `--stencil 7pt-const`
-runs a request loop where each request advances a resident grid N time
-steps through the MWD kernel, with the plan resolved registry-first from
-the persistent tuned-plan cache (run `python -m repro.launch.tune` once;
-every later server start skips the search):
+Also serves the paper's stencil workload as a REQUEST-QUEUE SERVER:
+`--stencil 7pt-const` runs a dynamic-batching loop where incoming requests
+(each: advance my grid N time steps) are bucketed by batchability — operator
+fingerprint, grid shape, step count, dtype, scalar coefficients — and every
+bucket head waits at most `--batch-window-ms` for up to `--max-batch`
+same-bucket arrivals before ONE fused `ops.mwd_batched` launch advances the
+whole batch. One launch for B users instead of B kernel round-trips is the
+serving analogue of the paper's intra-tile sharing: the shared resource is
+the launch itself. Plans resolve registry-first under the batched ``b<B>``
+key (run `python -m repro.launch.tune` once; every later server start skips
+the search):
 
   PYTHONPATH=src python -m repro.launch.serve --stencil 7pt-const \
-      --requests 8 --steps 4
+      --requests 8 --steps 4 --max-batch 4 --batch-window-ms 5
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -30,11 +37,26 @@ from repro.training import sharding as shd
 from repro.training import steps as tsteps
 
 
-def prefill_into_cache(cfg, params, tokens):
+def prefill_into_cache(cfg, params, tokens, gen: int,
+                       cache_len: int | None = None):
     """Prefill by stepping the decode path (simple, exact; a fused chunked
-    prefill-into-cache is the serving-optimized variant)."""
+    prefill-into-cache is the serving-optimized variant).
+
+    The cache is sized for the WHOLE request — prompt plus the `gen` tokens
+    the decode loop will append. (It used to be a fixed prompt+64, which
+    silently overflowed — wrapped or clobbered positions — as soon as
+    --gen exceeded 64.)  A caller-provided `cache_len` is guarded against
+    that same overflow instead of trusted.
+    """
+    if gen < 0:
+        raise ValueError(f"gen must be >= 0, got {gen}")
     b, s = tokens.shape
-    cache = lm.init_cache(cfg, b, s + 64)
+    if cache_len is None:
+        cache_len = s + max(gen, 1)     # decode reads one slot past prefill
+    if cache_len < s + gen:
+        raise ValueError(f"cache_len={cache_len} cannot hold the "
+                         f"{s}-token prompt plus {gen} generated tokens")
+    cache = lm.init_cache(cfg, b, cache_len)
     serve = tsteps.make_serve_step(cfg)
     logits = None
     for i in range(s):
@@ -42,47 +64,169 @@ def prefill_into_cache(cfg, params, tokens):
     return logits, cache
 
 
-def serve_stencil(name: str, grid, n_steps: int, n_requests: int):
-    """Stencil-advance serving loop: one warm jitted MWD launch per request.
+# ---------------------------------------------------------------------------
+# Stencil request-queue serving (dynamic batching over the MWD kernel)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(eq=False)        # identity equality: fields hold arrays
+class StencilRequest:
+    """One user request: advance my resident grid `n_steps` time steps."""
+
+    rid: int
+    spec: object                # StencilOp
+    state: tuple                # (cur, prev)
+    coeffs: object              # the op's packed coefficients
+    n_steps: int
+    arrival_s: float = 0.0      # offset from server start
+
+
+def bucket_key(spec, state, coeffs, n_steps: int) -> tuple:
+    """Batchability class of a request.
+
+    Requests may share one fused batched launch iff they agree on the
+    operator's structural fingerprint, grid shape, dtype, step count AND
+    scalar coefficients — the scalars are compile-time constants the kernel
+    inlines, so two requests with different physics constants can never ride
+    the same launch (per-cell coefficient *arrays* batch freely).
+    """
+    from repro.core import ir
+
+    _, scalars = ir.split_coeffs(spec, coeffs)
+    cur = state[0]
+    return (spec.fingerprint, tuple(cur.shape), str(cur.dtype), n_steps,
+            tuple(float(x) for x in scalars))
+
+
+def serve_queue(requests, *, max_batch: int = 4, batch_window_ms: float = 5.0,
+                plan="auto"):
+    """Dynamic-batching serving loop over `requests` (FIFO per bucket).
+
+    When a request reaches the head of the queue the server collects every
+    already-arrived same-bucket request, then keeps waiting — at most
+    `batch_window_ms` past the head's service start — while the batch is
+    short of `max_batch`; the batch then advances in ONE fused
+    `ops.mwd_batched` launch. Requests from other buckets are never mixed in
+    and are served on subsequent iterations.
+
+    `plan` is an `MWDPlan` applied to every launch or "auto", which resolves
+    registry-first per (bucket, batch size) under the ``b<B>`` key.
+
+    Returns ``(results, records)``: `results[rid] = (cur, prev)` and one
+    ``{"rids", "size", "key", "done_s"}`` dict per launched batch.
+    """
+    from repro.kernels import ops
+
+    pending = sorted(requests, key=lambda r: r.arrival_s)
+    keys = {id(r): bucket_key(r.spec, r.state, r.coeffs, r.n_steps)
+            for r in pending}           # immutable per request: compute once
+    results: dict[int, tuple] = {}
+    records: list[dict] = []
+    t0 = time.perf_counter()
+
+    def now() -> float:
+        return time.perf_counter() - t0
+
+    while pending:
+        head = pending[0]
+        time.sleep(max(0.0, head.arrival_s - now()))
+        key = keys[id(head)]
+        deadline = now() + batch_window_ms / 1e3
+        mates = [r for r in pending if keys[id(r)] == key]
+        while True:
+            arrived = [r for r in mates if r.arrival_s <= now()]
+            if len(arrived) >= max_batch:
+                arrived = arrived[:max_batch]
+                break
+            upcoming = [r for r in mates[:max_batch] if r.arrival_s > now()]
+            if not upcoming or upcoming[0].arrival_s > deadline:
+                break
+            time.sleep(max(0.0, upcoming[0].arrival_s - now()))
+        batch = arrived
+        pending = [r for r in pending if r not in batch]
+
+        cur, prev = ops.mwd_batched(
+            head.spec, [r.state for r in batch],
+            [r.coeffs for r in batch], head.n_steps, plan=plan)
+        jax.block_until_ready((cur, prev))
+        done = now()
+        for i, r in enumerate(batch):
+            results[r.rid] = (cur[i], prev[i])
+        records.append({"rids": [r.rid for r in batch], "size": len(batch),
+                        "key": key, "done_s": done})
+    return results, records
+
+
+def serve_stencil(name: str, grid, n_steps: int, n_requests: int, *,
+                  max_batch: int = 4, batch_window_ms: float = 5.0,
+                  arrival_ms: float = 1.0, seed: int = 0):
+    """Stencil-advance request-queue server: dynamic batching over MWD.
 
     `name` is any operator `repro.core.ir.resolve_op` knows: one of the four
     paper stencils, a registered user-defined `StencilOp`, or a
-    ``module.path:ATTR`` import reference.  The MWD plan is resolved
-    registry-first (repro.core.registry, keyed by the op's structural
-    fingerprint) so a tuned deployment pays zero search/measurement at
-    server start; on a registry miss the model-scored auto-tuner picks the
-    plan analytically.
+    ``module.path:ATTR`` import reference.  `n_requests` requests (each its
+    own grid + coefficients, arriving `arrival_ms` apart) are served through
+    `serve_queue`: bucketed by batchability, batched up to `max_batch`
+    within `batch_window_ms`, one fused batched MWD launch per batch.  The
+    plan resolves registry-first under the batched ``b<B>`` key (zero
+    search/measurement after one `python -m repro.launch.tune`); on a miss
+    the model-scored auto-tuner picks it analytically.
+
+    Returns a report dict (plan, source, latency percentiles, GLUP/s,
+    per-batch records).
     """
     from repro.core import ir, registry, stencils as stc
     from repro.kernels import ops
 
     spec = ir.resolve_op(name)
     grid = grid or registry.default_grid(spec)
-    state, coeffs = stc.make_problem(spec, grid, seed=0)
-    word = state[0].dtype.itemsize
-    plan, source = registry.resolve_plan(spec, grid, word_bytes=word)
+    problems = [stc.make_problem(spec, grid, seed=seed + i)
+                for i in range(n_requests)]
+    word = problems[0][0][0].dtype.itemsize
+    plan, source = registry.resolve_plan(spec, grid, word_bytes=word,
+                                         batch=max(1, max_batch))
     print(f"serving {spec.name} on {grid}: plan=dw{plan.d_w}.nf{plan.n_f}."
-          f"{'fused' if plan.fused else 'row'} ({source})")
+          f"{'fused' if plan.fused else 'row'} ({source}); "
+          f"max_batch={max_batch} window={batch_window_ms}ms")
 
-    state = ops.mwd(spec, state, coeffs, n_steps, plan=plan)  # compile/warm
-    jax.block_until_ready(state)
-    lups = float(np.prod(grid)) * n_steps
-    lat = []
-    for _ in range(n_requests):
-        t0 = time.perf_counter()
-        state = ops.mwd(spec, state, coeffs, n_steps, plan=plan)
-        jax.block_until_ready(state)
-        lat.append(time.perf_counter() - t0)
-    lat.sort()
-    p50 = lat[len(lat) // 2]
-    print(f"served {n_requests} requests x {n_steps} steps: "
-          f"p50 {p50*1e3:.1f}ms, max {lat[-1]*1e3:.1f}ms, "
-          f"{lups/p50/1e9:.4f} GLUP/s")
-    return plan, source
+    # warm EVERY batch size the queue can legally form (window jitter means
+    # any size in 1..max_batch can occur): compiling inside the serving loop
+    # would corrupt the latency percentiles the server exists to report
+    for b in range(1, min(max_batch, n_requests) + 1):
+        out = ops.mwd_batched(spec, [p[0] for p in problems[:b]],
+                              [p[1] for p in problems[:b]], n_steps,
+                              plan=plan)
+        jax.block_until_ready(out)
+
+    requests = [StencilRequest(rid=i, spec=spec, state=problems[i][0],
+                               coeffs=problems[i][1], n_steps=n_steps,
+                               arrival_s=i * arrival_ms / 1e3)
+                for i in range(n_requests)]
+    t_start = time.perf_counter()
+    results, records = serve_queue(requests, max_batch=max_batch,
+                                   batch_window_ms=batch_window_ms,
+                                   plan=plan)
+    t_wall = time.perf_counter() - t_start
+
+    done_by_rid = {rid: rec["done_s"] for rec in records
+                   for rid in rec["rids"]}
+    lat = sorted(done_by_rid[r.rid] - r.arrival_s for r in requests)
+    p50, p95, p99 = np.percentile(lat, [50, 95, 99])
+    lups = float(np.prod(grid)) * n_steps * n_requests
+    glups = lups / t_wall / 1e9
+    sizes = [rec["size"] for rec in records]
+    print(f"served {n_requests} requests x {n_steps} steps in "
+          f"{len(records)} batches (sizes {sizes}): "
+          f"p50 {p50*1e3:.1f}ms p95 {p95*1e3:.1f}ms p99 {p99*1e3:.1f}ms, "
+          f"agg {glups:.4f} GLUP/s")
+    return {"plan": plan, "source": source, "results": results,
+            "records": records, "latencies_s": lat, "p50_ms": p50 * 1e3,
+            "p95_ms": p95 * 1e3, "p99_ms": p99 * 1e3, "glups": glups,
+            "batch_sizes": sizes}
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
+def build_parser() -> argparse.ArgumentParser:
+    """CLI of the serving launcher (split out so tests can parse args)."""
+    ap = argparse.ArgumentParser(prog="python -m repro.launch.serve")
     ap.add_argument("--arch", default="llama3.2-1b",
                     choices=list(configs.ARCH_IDS))
     ap.add_argument("--stencil", default=None,
@@ -96,11 +240,24 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--steps", type=int, default=4,
                     help="time steps advanced per stencil request")
-    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="max requests fused into one batched MWD launch")
+    ap.add_argument("--batch-window-ms", type=float, default=5.0,
+                    help="max wait for same-bucket arrivals before launching")
+    ap.add_argument("--arrival-ms", type=float, default=1.0,
+                    help="synthetic inter-arrival gap between requests")
+    # BooleanOptionalAction so --no-reduced can actually reach the
+    # full-size config ('store_true' with default=True made it unreachable)
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=True)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
-    args = ap.parse_args(argv)
+    return ap
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
 
     if args.op_module:
         import importlib
@@ -108,7 +265,10 @@ def main(argv=None):
     if args.stencil:
         grid = (tuple(int(x) for x in args.grid.split(",")) if args.grid
                 else None)
-        serve_stencil(args.stencil, grid, args.steps, args.requests)
+        serve_stencil(args.stencil, grid, args.steps, args.requests,
+                      max_batch=args.max_batch,
+                      batch_window_ms=args.batch_window_ms,
+                      arrival_ms=args.arrival_ms)
         return
 
     cfg = configs.get(args.arch)
@@ -127,7 +287,7 @@ def main(argv=None):
 
     with compat.set_mesh(mesh):
         t0 = time.perf_counter()
-        _, cache = prefill_into_cache(cfg, params, prompts)
+        _, cache = prefill_into_cache(cfg, params, prompts, args.gen)
         t_prefill = time.perf_counter() - t0
 
         serve = jax.jit(tsteps.make_serve_step(cfg))

@@ -30,7 +30,7 @@ from repro.core import stencils as st
 def tune_one(spec: st.StencilSpec, grid_shape, registry: reg.PlanRegistry, *,
              word_bytes: int = 4, devices_x: int = 1, measured: bool = True,
              max_evals: int = 12, reps: int = 3, n_steps: int = 4,
-             force: bool = False) -> dict:
+             force: bool = False, batch: int = 1) -> dict:
     """Tune one (stencil, grid) problem registry-first; returns a report.
 
     On a registry hit (same key, same hardware fingerprint) no measurement
@@ -39,9 +39,14 @@ def tune_one(spec: st.StencilSpec, grid_shape, registry: reg.PlanRegistry, *,
     is upgraded by re-tuning, never silently returned. Otherwise the
     model-pruned search runs — measured wall-clock when `measured`,
     analytic ECM scores when not — and the winner is persisted.
+
+    `batch` > 1 tunes the batched serving launch: candidates are measured
+    as ONE `ops.mwd_batched` call advancing `batch` problems and the winner
+    persists under the ``b<batch>`` registry key, never colliding with the
+    B=1 entry for the same problem.
     """
     if not force:
-        entry = registry.get(spec, grid_shape, word_bytes, devices_x)
+        entry = registry.get(spec, grid_shape, word_bytes, devices_x, batch)
         if entry is not None and measured and entry.source != "measured":
             entry = None            # model-cached: upgrade with measurement
         if entry is not None:
@@ -53,7 +58,8 @@ def tune_one(spec: st.StencilSpec, grid_shape, registry: reg.PlanRegistry, *,
     t0 = time.perf_counter()
     if measured:
         scorer = autotune.measure_score(spec, grid_shape, word_bytes,
-                                        n_steps=n_steps, reps=reps)
+                                        n_steps=n_steps, reps=reps,
+                                        batch=batch)
         res = autotune.autotune(spec, grid_shape, devices_x=devices_x,
                                 measure=scorer, word_bytes=word_bytes,
                                 max_evals=max_evals, d_w_cap=ny)
@@ -61,11 +67,11 @@ def tune_one(spec: st.StencilSpec, grid_shape, registry: reg.PlanRegistry, *,
     else:
         res = autotune.autotune(spec, grid_shape, devices_x=devices_x,
                                 word_bytes=word_bytes, max_evals=max_evals,
-                                d_w_cap=ny)
+                                d_w_cap=ny, batch=batch)
         n_meas, source = 0, "model"
     registry.put(spec, grid_shape, res.plan, res.score, source=source,
                  evals=len(res.evaluated), word_bytes=word_bytes,
-                 devices_x=devices_x)
+                 devices_x=devices_x, batch=batch)
     return {"stencil": spec.name, "source": source, "plan": res.plan,
             "score": res.score, "measurements": n_meas,
             "evals": len(res.evaluated),
@@ -87,6 +93,10 @@ def main(argv=None) -> list[dict]:
                     help="Z,Y,X grid (default: per-stencil sanity scale)")
     ap.add_argument("--word-bytes", type=int, default=4)
     ap.add_argument("--devices-x", type=int, default=1)
+    ap.add_argument("--batch", type=int, default=1,
+                    help="tune the batched serving launch: measure ONE "
+                         "ops.mwd_batched call advancing B problems and "
+                         "persist under the b<B> registry key")
     ap.add_argument("--registry", type=str, default=None,
                     help=f"registry path (default ${reg.ENV_VAR} or "
                          f"{reg.DEFAULT_PATH})")
@@ -118,7 +128,7 @@ def main(argv=None) -> list[dict]:
         r = tune_one(spec, g, registry, word_bytes=args.word_bytes,
                      devices_x=args.devices_x, measured=not args.model_only,
                      max_evals=args.max_evals, reps=args.reps,
-                     n_steps=args.steps, force=args.force)
+                     n_steps=args.steps, force=args.force, batch=args.batch)
         p = r["plan"]
         print(f"{r['stencil']},{r['source']},"
               f"dw{p.d_w}.nf{p.n_f}.tg{p.tg_x}.{'fused' if p.fused else 'row'},"

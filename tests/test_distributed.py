@@ -73,6 +73,31 @@ for name in ("7pt-const", "25pt-const"):
     assert err < 1e-4 and err1 < 1e-4, (name, err, err1)
 print("mwd-kernel stepper OK")
 
+# 1c. plan="auto" regression: resolution must key on the PER-SHARD extended
+#     block shape (it used to key on the global grid, whose tuned d_w can
+#     exceed a shard's whole y extent) and cap an oversized tuned d_w.
+#     The registry holds ONLY an entry for the local extended shape, with a
+#     deliberately oversized d_w; autotune is stubbed to fail, so resolving
+#     against any other shape (a miss -> search) or failing to cap dies.
+import os as _os
+from repro.core import autotune as _at, registry as _reg
+_os.environ[_reg.ENV_VAR] = sys.argv[2] + "/plans.json"
+spec = st.SPECS["7pt-const"]
+shape = (8, 8, 16)                      # ny=8 over 2 y-shards: local ny 4
+shape_e = stepper.local_extended_shape(spec, mesh, shape, t_block=2)
+assert shape_e == (6, 8, 20), shape_e   # nz/4+2g, ny/2+2g, nx+2g (g=2)
+_reg.default_registry().put(spec, shape_e, MWDPlan(d_w=32, n_f=2), 9.0)
+def _no_search(*a, **k):
+    raise AssertionError("plan='auto' resolved off the per-shard key")
+_at.autotune = _no_search
+state, coeffs = st.make_problem(spec, shape, seed=11)
+want = st.run_naive(spec, state, coeffs, 4)
+got = stepper.run_distributed(spec, mesh, state, coeffs, 4, t_block=2,
+                              plan="auto")
+err = float(jnp.max(jnp.abs(want[0] - jax.device_get(got[0]))))
+assert err < 1e-4, err
+print("auto-plan shard-key OK")
+
 # 1b. hoisted-coefficient variant (one-time halo exchange) is equivalent
 spec = st.SPECS["7pt-var"]
 state, coeffs = st.make_problem(spec, (8, 8, 16), seed=3)
@@ -137,3 +162,4 @@ def test_distributed_subprocess(tmp_path):
         capture_output=True, text=True, timeout=900)
     assert proc.returncode == 0, proc.stderr[-4000:]
     assert "ALL_SUBPROCESS_OK" in proc.stdout, proc.stdout
+    assert "auto-plan shard-key OK" in proc.stdout, proc.stdout

@@ -233,7 +233,8 @@ def test_measure_score_times_real_launch():
 
 
 def test_run_distributed_accepts_auto_plan(tmp_path, monkeypatch):
-    """The stepper resolves plan="auto" registry-first (single process)."""
+    """The stepper resolves plan="auto" registry-first (single process),
+    keyed on the PER-SHARD extended block shape the kernel launches on."""
     import numpy as np
 
     from repro import compat
@@ -244,12 +245,14 @@ def test_run_distributed_accepts_auto_plan(tmp_path, monkeypatch):
     monkeypatch.setenv(reg.ENV_VAR, path)
     spec = stencils.SPECS["7pt-const"]
     shape = (8, 12, 10)
-    reg.PlanRegistry(path).put(spec, shape, MWDPlan(d_w=4, n_f=2), 5.0)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    shape_e = stepper.local_extended_shape(spec, mesh, shape, t_block=2)
+    assert shape_e == (12, 16, 14)      # +2g on every axis, g = R*t_block
+    reg.PlanRegistry(path).put(spec, shape_e, MWDPlan(d_w=4, n_f=2), 5.0)
     monkeypatch.setattr(autotune, "autotune",
                         lambda *a, **k: pytest.fail("searched on a hit"))
 
     state, coeffs = stencils.make_problem(spec, shape, seed=3)
-    mesh = compat.make_mesh((1, 1), ("data", "model"))
     out = stepper.run_distributed(spec, mesh, state, coeffs, 4, t_block=2,
                                   plan="auto")
     want = stencils.run_naive(spec, state, coeffs, 4)
