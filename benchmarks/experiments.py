@@ -1,0 +1,522 @@
+"""Render the paper's performance study from results/ into docs/REPRODUCTION.md.
+
+This is the publishing half of the experiment subsystem: `repro.launch.sweep`
+records measured/model points into versioned JSON under ``results/``; this
+module turns them into the paper-style tables — GLUP/s vs grid size
+(Figs. 8-15), B/LUP vs grid size (Fig. 4), energy vs tuning choice (Fig. 19),
+and the model-vs-measured validation (Sec. 7) with per-machine constants
+fitted by `repro.core.models.fit_ecm`. When a multi-pod dry-run record
+(``results/dryrun.json``, written by `repro.launch.dryrun`) is present, its
+dry-run/roofline tables are appended.
+
+The rendered report is committed as ``docs/REPRODUCTION.md`` and kept honest
+by CI: ``--check`` re-renders from the committed results and fails when the
+committed report drifts; ``--check-links`` verifies every relative link in
+the docs tree and README resolves.
+
+  PYTHONPATH=src:. python -m benchmarks.experiments               # render
+  PYTHONPATH=src:. python -m benchmarks.experiments --check       # CI gate
+  PYTHONPATH=src:. python -m benchmarks.experiments --check-links
+
+(The pre-sweep pipeline — finalize_experiments.py splicing a nonexistent
+EXPERIMENTS.template.md and hillclimb_report.py — is retired; the dry-run
+tables it rendered live on here.)
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+
+from repro.core import models
+
+DEFAULT_RESULTS_DIR = "results"
+DEFAULT_OUT = os.path.join("docs", "REPRODUCTION.md")
+DOC_ROOTS = ("docs", "README.md", "DESIGN.md", "examples/README.md")
+
+
+# ---------------------------------------------------------------------------
+# Loading
+# ---------------------------------------------------------------------------
+
+def load_sweeps(results_dir: str = DEFAULT_RESULTS_DIR) -> dict:
+    """Merge every ``sweep*.json`` in `results_dir` into one point map.
+
+    Later files (lexicographic) win on key collisions — stable regardless of
+    filesystem enumeration order, so the render is deterministic.
+    """
+    merged: dict = {"points": {}, "files": [], "fingerprints": set()}
+    for path in sorted(glob.glob(os.path.join(results_dir, "sweep*.json"))):
+        try:
+            with open(path) as f:
+                raw = json.load(f)
+        except (OSError, ValueError):
+            continue
+        merged["files"].append(os.path.basename(path))
+        merged["points"].update(raw.get("points", {}))
+        for p in raw.get("points", {}).values():
+            merged["fingerprints"].add(p.get("hw_fingerprint", "?"))
+    merged["fingerprints"] = sorted(merged["fingerprints"])
+    return merged
+
+
+def _grid_str(p: dict) -> str:
+    return "x".join(str(n) for n in p["grid"])
+
+
+def _plan_str(p: dict) -> str:
+    pl = p["plan"]
+    return f"dw{pl['d_w']}.nf{pl['n_f']}" + ("" if pl["fused"] else ".row")
+
+
+def _sorted_points(points: dict) -> list[dict]:
+    return [points[k] for k in sorted(points)]
+
+
+def _by_stencil(pts: list[dict]) -> dict[str, list[dict]]:
+    out: dict[str, list[dict]] = {}
+    for p in pts:
+        out.setdefault(p["stencil"], []).append(p)
+    # grid-size-major ordering inside each stencil
+    for v in out.values():
+        v.sort(key=lambda p: (tuple(p["grid"]), p["mode"], p["batch"]))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Tables
+# ---------------------------------------------------------------------------
+
+def glups_table(pts: list[dict], calib: models.EcmCalibration | None) -> str:
+    """Measured vs modeled throughput per (grid, mode, batch) row."""
+    rows = ["| grid | mode | B | plan | measured GLUP/s | v5e model GLUP/s "
+            "| calibrated GLUP/s | residual |",
+            "|---|---|---|---|---|---|---|---|"]
+    for p in pts:
+        meas = p["measured"]
+        cal = res = "-"
+        if calib is not None:
+            t_cal = calib.predict_s(p["flops"], p["traffic"]["hbm_bytes"])
+            cal = f"{p['lups'] / t_cal / 1e9:.5f}"
+            res = f"{(t_cal - meas['t_s']) / meas['t_s']:+.0%}"
+        rows.append(
+            f"| {_grid_str(p)} | {p['mode']} | {p['batch']} | {_plan_str(p)} "
+            f"| {meas['glups']:.5f} | {p['model']['glups']:.2f} "
+            f"| {cal} | {res} |")
+    return "\n".join(rows)
+
+
+def blup_table(pts: list[dict]) -> str:
+    """Eq. 5 model vs exact kernel DMA code balance per row."""
+    rows = ["| grid | mode | D_w | Eq.5 model B/LUP | exact kernel B/LUP "
+            "| spatial B/LUP | vs spatial |",
+            "|---|---|---|---|---|---|---|"]
+    for p in pts:
+        if p["batch"] != 1 or p.get("distributed"):
+            continue
+        bk = p["traffic"]["b_per_lup"]
+        bs = p["model"]["bc_spatial"]
+        rows.append(
+            f"| {_grid_str(p)} | {p['mode']} | {p['plan']['d_w']} "
+            f"| {p['model']['bc_eq5']:.2f} | {bk:.2f} | {bs:.2f} "
+            f"| {1 - bk / bs:+.0%} |")
+    return "\n".join(rows)
+
+
+def energy_table(pts: list[dict]) -> str:
+    """Fig. 19 analog: modeled v5e energy split per tuning choice."""
+    rows = ["| grid | mode | B/LUP | core J | HBM J | static J | total J "
+            "| pJ/LUP |",
+            "|---|---|---|---|---|---|---|---|"]
+    for p in pts:
+        if p["batch"] != 1 or p.get("distributed"):
+            continue
+        e = p["model"]["energy_j"]
+        rows.append(
+            f"| {_grid_str(p)} | {p['mode']} | {p['traffic']['b_per_lup']:.2f} "
+            f"| {e['core']:.2e} | {e['hbm']:.2e} | {e['static']:.2e} "
+            f"| {e['total']:.2e} | {e['total'] / p['lups'] * 1e12:.1f} |")
+    return "\n".join(rows)
+
+
+def residual_table(report: dict) -> str:
+    """Per-point calibrated-vs-measured overlay rows.
+
+    Sweep keys use ``|`` as their field separator, which would split a
+    markdown table cell (backticks do NOT escape pipes in GFM tables), so
+    the keys are embedded with ``\\|``.
+    """
+    rows = ["| point | measured s | calibrated s | residual |",
+            "|---|---|---|---|"]
+    for e in report["per_point"]:
+        key = e["key"].replace("|", "\\|")
+        rows.append(f"| `{key}` | {e['measured_s']:.4f} "
+                    f"| {e['calibrated_s']:.4f} | {e['rel_err']:+.0%} |")
+    return "\n".join(rows)
+
+
+def distributed_table(pts: list[dict]) -> str:
+    """Deep-halo super-stepper leg rows (present when the sweep ran it)."""
+    rows = ["| stencil | grid | devices | t_block | plan | measured GLUP/s "
+            "| v5e model GLUP/s |",
+            "|---|---|---|---|---|---|---|"]
+    for p in pts:
+        m = p["measured"]
+        rows.append(
+            f"| {p['stencil']} | {_grid_str(p)} | {m['n_devices']} "
+            f"| {m['t_block']} | {_plan_str(p)} | {m['glups']:.5f} "
+            f"| {p['model']['glups']:.2f} |")
+    return "\n".join(rows)
+
+
+# --- multi-pod dry-run tables (folded from the retired benchmarks/report.py)
+
+def _fmt_bytes(b) -> str:
+    if b is None:
+        return "-"
+    for unit, div in (("TiB", 2**40), ("GiB", 2**30), ("MiB", 2**20),
+                      ("KiB", 2**10)):
+        if b >= div:
+            return f"{b / div:.2f}{unit}"
+    return f"{b:.0f}B"
+
+
+def _ms(s) -> str:
+    return f"{s * 1e3:.2f}" if s is not None else "-"
+
+
+def dryrun_table(results: list[dict], mesh: str) -> str:
+    """Per-cell dry-run table (memory/cost analysis) for one mesh."""
+    rows = [("| arch | shape | status | flops/dev | HLO B/dev | model B/dev "
+             "| coll B/dev | args/dev | temp/dev | compile s |"),
+            "|" + "---|" * 10]
+    for r in results:
+        if r.get("mesh") != mesh:
+            continue
+        if "skip" in r:
+            rows.append(f"| {r['arch']} | {r['shape']} | SKIP: {r['skip']} "
+                        + "| - " * 7 + "|")
+            continue
+        if "error" in r:
+            rows.append(f"| {r['arch']} | {r['shape']} | "
+                        f"ERROR: {r['error'][:60]} " + "| - " * 7 + "|")
+            continue
+        coll = sum(r["coll_bytes"].values())
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | ok | "
+            f"{r['flops_per_device']:.2e} | "
+            f"{_fmt_bytes(r['bytes_per_device'])} | "
+            f"{_fmt_bytes(r['model_bytes_per_device'])} | "
+            f"{_fmt_bytes(coll)} | "
+            f"{_fmt_bytes(r['arg_bytes_per_device'])} | "
+            f"{_fmt_bytes(r['peak_bytes_per_device'] - r['arg_bytes_per_device'])} | "
+            f"{r['lower_s'] + r['compile_s']:.0f} |")
+    return "\n".join(rows)
+
+
+def bottleneck_note(r: dict) -> str:
+    """One-phrase diagnosis of a dry-run cell's dominant roofline term."""
+    d = r["dominant"]
+    coll = r["coll_bytes"]
+    if d == "collective":
+        top = max(coll, key=coll.get)
+        if top == "all-reduce":
+            return ("grad/activation all-reduce dominates: reduce-scatter "
+                    "rewrite or pod-compression moves it down")
+        if top == "all-to-all":
+            return "MoE dispatch all-to-all: larger capacity grouping helps"
+        return f"{top}-bound: overlap with compute / deeper halos"
+    if d == "memory":
+        return ("HBM streaming bound: raise arithmetic intensity "
+                "(temporal blocking / bigger microbatch)")
+    return "compute-bound: already at the MXU roof; fuse or quantize"
+
+
+def roofline_table(results: list[dict], mesh: str = "16x16") -> str:
+    """Three-term roofline table over one mesh's dry-run cells."""
+    rows = [("| arch | shape | t_compute ms | t_memory ms | t_coll ms | "
+             "dominant | MODEL_FLOPS | useful | bottleneck note |"),
+            "|" + "---|" * 9]
+    for r in results:
+        if r.get("mesh") != mesh or "skip" in r or "error" in r:
+            continue
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {_ms(r['t_compute'])} | "
+            f"{_ms(r['t_memory'])} | {_ms(r['t_collective'])} | "
+            f"**{r['dominant']}** | {r['model_flops_global']:.2e} | "
+            f"{r['useful_flops_ratio']:.2f} | {bottleneck_note(r)} |")
+    return "\n".join(rows)
+
+
+# ---------------------------------------------------------------------------
+# The report
+# ---------------------------------------------------------------------------
+
+def render(results_dir: str = DEFAULT_RESULTS_DIR) -> str:
+    """Render the whole REPRODUCTION.md report from `results_dir`."""
+    sweeps = load_sweeps(results_dir)
+    pts = _sorted_points(sweeps["points"])
+    launch_pts = [p for p in pts if not p.get("distributed")]
+    dist_pts = [p for p in pts if p.get("distributed")]
+
+    calib = None
+    residuals = None
+    if len(launch_pts) >= 3:
+        fit_pts = [{"key": p["key"], "flops": p["flops"],
+                    "hbm_bytes": p["traffic"]["hbm_bytes"],
+                    "measured_s": p["measured"]["t_s"],
+                    "model_s": p["model"]["t_s"]} for p in launch_pts]
+        residuals = models.model_residuals(fit_pts)
+        residuals["per_point"].sort(key=lambda e: e["key"])
+        c = residuals["calibration"]
+        calib = models.EcmCalibration(**c)
+
+    out = []
+    out.append("# REPRODUCTION — the paper's performance study, regenerated")
+    out.append("")
+    out.append("> Generated by `python -m benchmarks.experiments` from the "
+               "sweep records under `results/`")
+    out.append("> (written by `python -m repro.launch.sweep`). Do NOT edit "
+               "by hand: CI re-renders this")
+    out.append("> file from the committed results and fails on drift "
+               "(`--check`). Wall-clock numbers are")
+    out.append("> whatever machine ran the sweep (this repo commits the CPU "
+               "interpret-mode smoke sweep);")
+    out.append("> model columns are the analytic v5e ECM/energy predictions "
+               "from `repro.core.models`.")
+    out.append("")
+    out.append("## Provenance")
+    out.append("")
+    out.append(f"- results files: {', '.join(sweeps['files']) or '(none)'}")
+    out.append(f"- sweep points: {len(launch_pts)} single-launch + "
+               f"{len(dist_pts)} distributed")
+    out.append("- hardware fingerprints: "
+               + (", ".join(f"`{f}`" for f in sweeps["fingerprints"])
+                  or "(none)"))
+    out.append("- regenerate: `python -m repro.launch.sweep --smoke` then "
+               "`python -m benchmarks.experiments`")
+    out.append("")
+
+    by_st = _by_stencil(launch_pts)
+    out.append("## 1. Throughput vs grid size (Figs. 8-15 analog)")
+    out.append("")
+    out.append("Measured wall-clock GLUP/s of the real MWD launch per grid "
+               "size, against the a-priori v5e")
+    out.append("ECM prediction and the machine-calibrated prediction "
+               "(Sec. 4 below). `B` is the serving")
+    out.append("batch advanced by one `ops.mwd_batched` launch.")
+    for name, sp in by_st.items():
+        out.append("")
+        out.append(f"### {name}")
+        out.append("")
+        out.append(glups_table(sp, calib))
+    out.append("")
+
+    out.append("## 2. Memory traffic vs grid size (Fig. 4 analog)")
+    out.append("")
+    out.append("The idealized Eq. 5 code balance against the kernel's EXACT "
+               "DMA accounting")
+    out.append("(`repro.core.traffic`, counted off the same compiled "
+               "schedule the kernel consumes), and")
+    out.append("the optimal spatial-blocking baseline the paper's argument "
+               "is measured against.")
+    out.append("At smoke-scale grids the rectangular window padding "
+               "dominates the exact counts, so the")
+    out.append("'vs spatial' saving goes negative — the Eq. 5 column is the "
+               "asymptotic (grid >> D_w)")
+    out.append("behavior the paper measures at production sizes; sweep "
+               "larger grids to watch the exact")
+    out.append("counts converge toward it.")
+    for name, sp in by_st.items():
+        out.append("")
+        out.append(f"### {name}")
+        out.append("")
+        out.append(blup_table(sp))
+    out.append("")
+
+    out.append("## 3. Energy vs tuning choice (Fig. 19 analog)")
+    out.append("")
+    out.append("Modeled v5e energy split `E = e_flop*F + e_byte*B_hbm + "
+               "P_static*T` at the model runtime.")
+    out.append("The fused schedule moves fewer HBM bytes than the per-row "
+               "mode at identical arithmetic, so")
+    out.append("its HBM term — the paper's DRAM-energy argument — drops "
+               "even where the speedup is marginal.")
+    for name, sp in by_st.items():
+        out.append("")
+        out.append(f"### {name}")
+        out.append("")
+        out.append(energy_table(sp))
+    out.append("")
+
+    out.append("## 4. Model validation (Sec. 7 analog)")
+    out.append("")
+    if residuals is None:
+        out.append("(needs at least 3 measured sweep points — run "
+                   "`python -m repro.launch.sweep`)")
+    else:
+        c = residuals["calibration"]
+
+        def _rate(x):
+            return "inf" if x == float("inf") else f"{x:.3e}"
+
+        out.append("Per-machine effective ECM constants fitted from the "
+                   "measured points (`models.fit_ecm`,")
+        out.append("`t = F/flops_per_s + B_hbm/hbm_bytes_per_s + "
+                   "t_dispatch_s`):")
+        out.append("")
+        out.append("| constant | fitted value |")
+        out.append("|---|---|")
+        out.append(f"| `flops_per_s` | {_rate(c['flops_per_s'])} |")
+        out.append(f"| `hbm_bytes_per_s` | {_rate(c['hbm_bytes_per_s'])} |")
+        out.append(f"| `t_dispatch_s` | {c['t_dispatch_s']:.2e} |")
+        out.append(f"| points | {c['n_points']} |")
+        out.append("")
+        out.append(f"Residuals (calibrated vs measured): mean abs "
+                   f"{residuals['mean_abs_rel_err']:.0%}, max abs "
+                   f"{residuals['max_abs_rel_err']:.0%}, bias "
+                   f"{residuals['bias']:+.0%}.")
+        out.append("")
+        out.append(residual_table(residuals))
+    out.append("")
+
+    if dist_pts:
+        out.append("## 5. Distributed super-stepper leg")
+        out.append("")
+        out.append("Deep-halo super-steps (`repro.distributed.stepper`) on "
+                   "the local mesh: one fused MWD")
+        out.append("launch per halo exchange, plan resolved against each "
+                   "shard's extended block.")
+        out.append("")
+        out.append(distributed_table(dist_pts))
+        out.append("")
+
+    dryrun_path = os.path.join(results_dir, "dryrun.json")
+    if os.path.exists(dryrun_path):
+        with open(dryrun_path) as f:
+            dr = json.load(f)
+        out.append("## 6. Multi-pod dry-run & roofline")
+        out.append("")
+        out.append("### 16x16 pod (256 chips)")
+        out.append("")
+        out.append(dryrun_table(dr, "16x16"))
+        out.append("")
+        out.append("### 2x16x16 multi-pod (512 chips)")
+        out.append("")
+        out.append(dryrun_table(dr, "2x16x16"))
+        out.append("")
+        out.append("### Roofline (single-pod)")
+        out.append("")
+        out.append(roofline_table(dr))
+        out.append("")
+
+    return "\n".join(out).rstrip() + "\n"
+
+
+# ---------------------------------------------------------------------------
+# Link checking
+# ---------------------------------------------------------------------------
+
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def check_links(roots=DOC_ROOTS, repo_root: str = ".") -> list[str]:
+    """Broken relative links in the docs tree and README (one str each).
+
+    Scans every markdown file under the given roots for ``[text](target)``
+    links; external targets (with a URL scheme) are skipped, anchors are
+    stripped, and a relative target must exist relative to the linking
+    file's directory.
+    """
+    paths: list[str] = []
+    for root in roots:
+        full = os.path.join(repo_root, root)
+        if os.path.isdir(full):
+            paths += sorted(glob.glob(os.path.join(full, "**", "*.md"),
+                                      recursive=True))
+        elif os.path.exists(full):
+            paths.append(full)
+    problems = []
+    for path in paths:
+        with open(path) as f:
+            text = f.read()
+        for target in _LINK_RE.findall(text):
+            if "://" in target or target.startswith("mailto:"):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue            # pure in-page anchor
+            resolved = os.path.normpath(
+                os.path.join(os.path.dirname(path), rel))
+            if not os.path.exists(resolved):
+                problems.append(f"{path}: broken link -> {target}")
+    return problems
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def main(argv=None) -> int:
+    """CLI entry point; returns a process exit code (tested directly)."""
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.experiments",
+        description="Render results/ sweeps into docs/REPRODUCTION.md")
+    ap.add_argument("--results", default=DEFAULT_RESULTS_DIR,
+                    help="results directory holding sweep*.json "
+                         "(+ optional dryrun.json)")
+    ap.add_argument("--out", default=DEFAULT_OUT,
+                    help="report path to write (or compare with --check)")
+    ap.add_argument("--check", action="store_true",
+                    help="do not write: re-render and fail (exit 2) if the "
+                         "committed report differs")
+    ap.add_argument("--check-links", action="store_true",
+                    help="verify every relative link under docs/ and in "
+                         "README/DESIGN resolves (exit 3 on breakage)")
+    args = ap.parse_args(argv)
+
+    if args.check_links:
+        problems = check_links()
+        for p in problems:
+            print(p)
+        print(f"link check: {len(problems)} broken")
+        return 3 if problems else 0
+
+    text = render(args.results)
+    if args.check:
+        try:
+            with open(args.out) as f:
+                committed = f.read()
+        except OSError:
+            print(f"--check: {args.out} missing; run "
+                  f"`python -m benchmarks.experiments` and commit it")
+            return 2
+        if committed != text:
+            got, want = committed.splitlines(), text.splitlines()
+            for i, (a, b) in enumerate(zip(got, want)):
+                if a != b:
+                    print(f"--check: {args.out} drifts from regeneration at "
+                          f"line {i + 1}:\n  committed: {a}\n  rendered:  {b}")
+                    break
+            else:
+                print(f"--check: {args.out} drifts from regeneration "
+                      f"(length {len(got)} vs {len(want)} lines)")
+            print("re-run `python -m benchmarks.experiments` and commit the "
+                  "regenerated report")
+            return 2
+        print(f"--check: {args.out} matches regeneration "
+              f"({len(text.splitlines())} lines)")
+        return 0
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write(text)
+    print(f"wrote {args.out} ({len(text.splitlines())} lines)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,92 +1,13 @@
-"""Exact HBM-traffic accounting of the kernel implementations.
-
-The kernels' DMA schedule is fully explicit (manual async copies), so the
-implementation's true HBM traffic is computable exactly — the analog of the
-paper's hardware-counter "measured" curves in Fig. 4, with the idealized
-Eq. 4/5 model as the other curve. Deviations = halo overlap + window padding,
-exactly the effects the paper measures.
+"""Compatibility shim: the exact HBM-traffic accounting moved to
+`repro.core.traffic` so the sweep harness (`repro.launch.sweep`) can use it
+without importing the benchmarks package. Import from there in new code.
 """
 
 from __future__ import annotations
 
-from repro.core.models import mwd_tile_bytes
-from repro.core.stencils import StencilSpec
-from repro.core.tiling import compile_schedule, make_diamond_schedule
-
-
-def mwd_pass_traffic(spec: StencilSpec, grid_shape, d_w: int, n_f: int,
-                     word: int = 4) -> dict:
-    """Bytes DMA'd by stencil_mwd.mwd_run for a full T-step advance, exact."""
-    nz, ny, nx = grid_shape
-    r = spec.radius
-    h = d_w // (2 * r)
-    n_tiles = ny // d_w + 3
-    # rows per full diamond pass advance h steps; a T-total run needs
-    # ceil(T/h)+1 row passes — report per single row pass here
-    bytes_pass = n_tiles * mwd_tile_bytes(spec, d_w, n_f, nz, nx, word)
-    lups_pass = nz * ny * nx * h                     # LUPs advanced per pass
-    return {"bytes": float(bytes_pass), "lups": float(lups_pass),
-            "code_balance": bytes_pass / lups_pass,
-            "rows_per_pass": 1, "steps_per_pass": h}
-
-
-def mwd_run_traffic(spec: StencilSpec, grid_shape, n_steps: int, d_w: int,
-                    n_f: int, word: int = 4, fused: bool = True) -> dict:
-    """Exact DMA bytes of stencil_mwd.mwd_run for a full n_steps advance.
-
-    Counted straight off the compiled schedule the kernel itself consumes:
-
-      fused=True   one launch for the whole schedule; inactive edge tiles
-                   are skipped and the parity grids stay aliased in HBM —
-                   only active tiles' window streams + strip emissions move.
-      fused=False  one launch per diamond row; EVERY tile of every row
-                   streams its window and re-emits its strip (the legacy
-                   mode), so the inactive edge tiles' round-trips are the
-                   inter-row traffic the fused schedule saves.
-    """
-    nz, ny, nx = grid_shape
-    r = spec.radius
-    comp = compile_schedule(
-        make_diamond_schedule(d_w, r, n_steps, r, ny - r))
-    n_tiles = comp.n_active if fused else comp.n_rows * comp.n_tiles
-    bytes_total = n_tiles * mwd_tile_bytes(spec, d_w, n_f, nz, nx, word)
-    lups = nz * ny * nx * n_steps
-    return {"bytes": float(bytes_total), "lups": float(lups),
-            "code_balance": bytes_total / lups,
-            "launches": 1 if fused else comp.n_rows,
-            "tiles": int(n_tiles), "rows": comp.n_rows}
-
-
-def ghostzone_pass_traffic(spec: StencilSpec, grid_shape, t_block: int,
-                           bz: int, by: int, word: int = 4) -> dict:
-    nz, ny, nx = grid_shape
-    r = spec.radius
-    g = r * t_block
-    nzp = -(-nz // bz) * bz
-    nyp = -(-ny // by) * by
-    nxp = nx + 2 * g
-    n_blocks = (nzp // bz) * (nyp // by)
-    # streamed windows, IR-derived: cur (+ prev for 2nd order) + every
-    # stacked coefficient stream (same count for all four paper ops as the
-    # old per-time-order formula, but also right for custom 2nd-order ops
-    # with several coefficient arrays)
-    n_in = 1 + (1 if spec.time_order == 2 else 0) + spec.n_coeff_arrays
-    in_bytes = n_blocks * n_in * (bz + 2 * g) * (by + 2 * g) * nxp * word
-    out_bytes = n_blocks * 2 * bz * by * nxp * word
-    lups = nz * ny * nx * t_block
-    return {"bytes": float(in_bytes + out_bytes), "lups": float(lups),
-            "code_balance": (in_bytes + out_bytes) / lups}
-
-
-def spatial_pass_traffic(spec: StencilSpec, grid_shape, bz: int,
-                         word: int = 4) -> dict:
-    nz, ny, nx = grid_shape
-    r = spec.radius
-    nzp = -(-nz // bz) * bz
-    nyp, nxp = ny + 2 * r, nx + 2 * r
-    n_in = 1 + (1 if spec.time_order == 2 else 0) + spec.n_coeff_arrays
-    in_bytes = (nzp // bz) * n_in * (bz + 2 * r) * nyp * nxp * word
-    out_bytes = nzp * nyp * nxp * word
-    lups = nz * ny * nx
-    return {"bytes": float(in_bytes + out_bytes), "lups": float(lups),
-            "code_balance": (in_bytes + out_bytes) / lups}
+from repro.core.traffic import (  # noqa: F401
+    ghostzone_pass_traffic,
+    mwd_pass_traffic,
+    mwd_run_traffic,
+    spatial_pass_traffic,
+)

@@ -44,7 +44,7 @@ def main():
               f"MWD(D_w={d_w}) {bc_mwd:5.2f} B/LUP "
               f"({bc_spatial/bc_mwd:.1f}x less HBM traffic)")
         assert all(e < 1e-3 for e in errs.values()), errs
-    print("\nall methods agree; see benchmarks/ and EXPERIMENTS.md for the "
+    print("\nall methods agree; see benchmarks/ and docs/REPRODUCTION.md for the "
           "full reproduction")
 
 

@@ -42,7 +42,7 @@ class ArchConfig:
     optimizer: str = "adamw"       # "adafactor" for the 398B/1T archs
     remat: bool = True
     dtype: str = "bfloat16"
-    # perf knobs (EXPERIMENTS.md SS Perf): sequence-parallel attention for
+    # perf knobs (docs/REPRODUCTION.md roofline): sequence-parallel attention for
     # head counts that don't divide the model axis; grad-reduction dtype
     seq_parallel_attn: bool = False
     grad_dtype: str = "float32"

@@ -2,7 +2,7 @@
 
 Scale notes: ~1.03T params (384 experts x 61 layers x 3*7168*2048); training
 state uses Adafactor (factored second moment) so params+opt fit the
-512 x 16 GB HBM budget — see DESIGN.md / EXPERIMENTS.md Dry-run.
+512 x 16 GB HBM budget — see DESIGN.md / docs/REPRODUCTION.md dry-run tables.
 """
 
 from repro.configs.base import ArchConfig

@@ -85,6 +85,65 @@ def model_score(spec: StencilSpec, grid_shape, word_bytes: int = 4,
     return score
 
 
+def time_callable(launch: Callable[[], object], *, reps: int = 3,
+                  warmup: int = 1) -> float:
+    """Median wall-clock seconds of `launch` over `reps` timed calls.
+
+    THE timing policy of the repo — `warmup` untimed calls (compilation),
+    then the median of `reps` `perf_counter` intervals. `launch` must block
+    until its device work completes (`jax.block_until_ready` inside).
+    Everything that reports a measured time (`measure_score`, the sweep
+    harness's single-launch and distributed legs) goes through here, so a
+    change of policy (median -> min, outlier rejection) lands everywhere
+    at once.
+    """
+    import time as _time
+
+    import numpy as np
+
+    for _ in range(warmup):
+        launch()
+    times = []
+    for _ in range(reps):
+        t0 = _time.perf_counter()
+        launch()
+        times.append(_time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def time_mwd_launch(spec: StencilSpec, states, coeffs, n_steps: int,
+                    plan: MWDPlan, *, reps: int = 3, warmup: int = 1) -> float:
+    """Median wall-clock seconds of ONE real MWD launch under `plan`.
+
+    The launch primitive shared by the measured auto-tuner
+    (`measure_score`) and the grid-size sweep harness
+    (`repro.launch.sweep`), so both report the same clock: the launch is
+    `ops.mwd` for one problem or `ops.mwd_batched` when `states`/`coeffs`
+    hold several, timed under the `time_callable` policy.
+
+    `states` and `coeffs` are parallel lists of per-problem (cur, prev)
+    pairs and packed coefficients (length 1 for a single-problem launch).
+    """
+    import jax
+
+    from repro.kernels import ops          # deferred: keeps core jax-light
+
+    batch = len(states)
+
+    def launch():
+        if batch > 1:
+            out = ops.mwd_batched(spec, states, coeffs, n_steps,
+                                  d_w=plan.d_w, n_f=plan.n_f,
+                                  fused=plan.fused)
+        else:
+            out = ops.mwd(spec, states[0], coeffs[0], n_steps,
+                          d_w=plan.d_w, n_f=plan.n_f, fused=plan.fused)
+        jax.block_until_ready(out)
+        return out
+
+    return time_callable(launch, reps=reps, warmup=warmup)
+
+
 def measure_score(spec: StencilSpec, grid_shape, word_bytes: int = 4,
                   chip: hw.ChipSpec = hw.V5E, *, n_steps: int = 4,
                   reps: int = 3, warmup: int = 1, seed: int = 0,
@@ -110,12 +169,6 @@ def measure_score(spec: StencilSpec, grid_shape, word_bytes: int = 4,
     The returned callable counts launches in its `measurements` attribute,
     which is how `repro.launch.tune` proves a registry hit measured nothing.
     """
-    import time as _time
-
-    import jax
-    import numpy as np
-
-    from repro.kernels import ops          # deferred: keeps core jax-light
     from repro.core import stencils as st
 
     nz, ny, nx = grid_shape
@@ -135,28 +188,11 @@ def measure_score(spec: StencilSpec, grid_shape, word_bytes: int = 4,
                      for i in range(batch)]
             problems[nx_l] = ([p[0] for p in probs], [p[1] for p in probs])
         states, coeffs = problems[nx_l]
-
-        def launch():
-            if batch > 1:
-                out = ops.mwd_batched(spec, states, coeffs, n_steps,
-                                      d_w=plan.d_w, n_f=plan.n_f,
-                                      fused=plan.fused)
-            else:
-                out = ops.mwd(spec, states[0], coeffs[0], n_steps,
-                              d_w=plan.d_w, n_f=plan.n_f, fused=plan.fused)
-            jax.block_until_ready(out)
-            return out
-
-        for _ in range(warmup):
-            launch()
-        times = []
-        for _ in range(reps):
-            t0 = _time.perf_counter()
-            launch()
-            times.append(_time.perf_counter() - t0)
+        t = time_mwd_launch(spec, states, coeffs, n_steps, plan,
+                            reps=reps, warmup=warmup)
         score.measurements += 1
         lups = nz * ny * nx_l * n_steps * batch
-        return lups / float(np.median(times)) / 1e9
+        return lups / t / 1e9
 
     score.measurements = 0
     return score

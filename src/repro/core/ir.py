@@ -469,8 +469,11 @@ def available() -> list[str]:
 
 
 def resolve_op(ref) -> StencilOp:
-    """Resolve an operator reference: a StencilOp, a (registered) name, or a
-    ``"module.path:ATTR"`` import reference (imported and auto-registered)."""
+    """Resolve an operator reference to its `StencilOp`.
+
+    Accepts a StencilOp (returned as-is), a (registered) name, or a
+    ``"module.path:ATTR"`` import reference (imported and auto-registered).
+    """
     if isinstance(ref, StencilOp):
         return ref
     if ref in OPS:              # built-ins always win over registrations

@@ -6,6 +6,9 @@
              with TPU's software-managed memory making the transfer terms exact.
 * Roofline — the three graded terms (compute / memory / collective).
 * Energy   — Fig. 19 analog: E = P_static*T + e_flop*F + e_byte*B_hbm.
+* Calibration — Sec. 7-8 analog: `fit_ecm` fits the phenomenological
+             constants to measured sweep points (repro.launch.sweep) and
+             `model_residuals` confronts model with measurement.
 
 All models are pure functions of the stencil spec + tiling plan + hardware
 spec so the auto-tuner and the benchmarks share one source of truth.
@@ -14,6 +17,7 @@ spec so the auto-tuner and the benchmarks share one source of truth.
 from __future__ import annotations
 
 import dataclasses
+import math
 
 from repro import hw
 from repro.core.stencils import StencilSpec
@@ -98,9 +102,11 @@ def batch_amortized_time(t_item_s: float, batch: int,
 
 def batch_amortization(t_item_s: float, batch: int,
                        t_dispatch_s: float = T_DISPATCH_S) -> float:
-    """Modeled throughput multiplier of one B-batch launch over B sequential
-    launches: ``B*(t + T_d) / (B*t + T_d)`` — >= 1, -> 1 as t dominates and
-    -> B as the dispatch dominates (tiny per-request grids)."""
+    """Modeled throughput multiplier of one B-batch launch over B launches.
+
+    ``B*(t + T_d) / (B*t + T_d)`` — >= 1, -> 1 as t dominates and -> B as
+    the dispatch dominates (tiny per-request grids).
+    """
     return (batch * (t_item_s + t_dispatch_s)
             / batch_amortized_time(t_item_s, batch, t_dispatch_s))
 
@@ -113,7 +119,7 @@ def mwd_tile_bytes(spec: StencilSpec, d_w: int, n_f: int, nz: int, nx: int,
     (N_F, D_w+2R, nx+2R) slab per wavefront step) plus strip emissions out
     (both parities, (N_F, D_w) per step once the pipeline fills). This is
     the single source of truth for the kernel's per-tile traffic; the
-    benchmarks.traffic counters and the auto-tuner overhead term below both
+    repro.core.traffic counters and the auto-tuner overhead term below both
     multiply it by their tile counts.
     """
     r = spec.radius
@@ -135,7 +141,7 @@ def mwd_row_overhead_bytes(spec: StencilSpec, d_w: int, n_f: int,
     the (at least two) inactive edge tiles that own no diamond spans; the
     fused kernel's active-tile gating skips them, and its aliased parity
     buffers never materialize fresh padded grids between rows. Exact per-run
-    counts live in benchmarks.traffic.mwd_run_traffic; this closed form is
+    counts live in repro.core.traffic.mwd_run_traffic; this closed form is
     the Eq. 5-style term the auto-tuner scores with.
     """
     nz, ny, nx = grid_shape
@@ -266,6 +272,132 @@ def roofline(flops_per_device: float, bytes_per_device: float,
         bytes_per_device=bytes_per_device,
         coll_bytes_per_device=coll_bytes_per_device,
     )
+
+
+# ---------------------------------------------------------------------------
+# Calibration / validation (paper Sec. 7-8: confront model with measurement)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EcmCalibration:
+    """Per-machine effective ECM constants fitted from measured sweep points.
+
+    The a-priori ECM-TPU model is parameterized by the v5e datasheet
+    (`hw.V5E`); the machine actually measured (this container: CPU interpret
+    mode, elsewhere: a real TPU) realizes different effective throughputs.
+    The paper's Sec. 7 validation therefore *fits* the phenomenological
+    constants to the sweep — the shape of the model (work terms plus a fixed
+    dispatch) is the claim under test, the constants are per-machine:
+
+        t(F, B_hbm) = F / flops_per_s + B_hbm / hbm_bytes_per_s + t_dispatch_s
+
+    An additive combination (no overlap) is the conservative ECM composition;
+    on machines that do overlap, the fit absorbs the overlap into the
+    effective rates. Rates can be ``math.inf`` when the fit finds a term
+    contributes nothing (its coefficient went to zero).
+    """
+
+    flops_per_s: float         # effective compute throughput (FLOP/s)
+    hbm_bytes_per_s: float     # effective memory throughput (B/s)
+    t_dispatch_s: float        # fixed per-launch overhead (s)
+    n_points: int              # sweep points the fit consumed
+    max_rel_err: float         # worst |pred - meas| / meas over the fit set
+
+    def predict_s(self, flops: float, hbm_bytes: float) -> float:
+        """Calibrated runtime (s) of a launch doing `flops` and `hbm_bytes`."""
+        t = self.t_dispatch_s
+        if self.flops_per_s != math.inf:
+            t += flops / self.flops_per_s
+        if self.hbm_bytes_per_s != math.inf:
+            t += hbm_bytes / self.hbm_bytes_per_s
+        return t
+
+
+def fit_ecm(points) -> EcmCalibration:
+    """Least-squares fit of the ECM constants from measured sweep points.
+
+    `points` is an iterable of ``(flops, hbm_bytes, measured_s)`` triples
+    (one per measured launch, e.g. from `repro.launch.sweep`). Solves
+    ``t = a*F + b*B + c`` for non-negative ``a, b, c``; a coefficient the
+    unconstrained solution drives negative is clamped to zero (that term is
+    not observable in the sweep — e.g. all points memory-bound) and the
+    remaining terms are re-fitted.  Raises ValueError on an empty point set;
+    a single point degenerates to a pure-dispatch fit.
+    """
+    import numpy as np
+
+    pts = [(float(f), float(b), float(t)) for f, b, t in points]
+    if not pts:
+        raise ValueError("fit_ecm needs at least one (flops, bytes, t) point")
+    design = np.array([[f, b, 1.0] for f, b, _ in pts])
+    target = np.array([t for _, _, t in pts])
+    active = [0, 1, 2]
+    coef = np.zeros(3)
+    for _ in range(3):              # clamp-and-refit (at most 3 rounds)
+        sol, *_ = np.linalg.lstsq(design[:, active], target, rcond=None)
+        coef = np.zeros(3)
+        coef[active] = sol
+        neg = [i for i in active if coef[i] < 0.0]
+        if not neg:
+            break
+        coef[neg] = 0.0
+        active = [i for i in active if i not in neg]
+        if not active:
+            break
+    a, b, c = (max(float(x), 0.0) for x in coef)
+    calib = EcmCalibration(
+        flops_per_s=(1.0 / a) if a > 0.0 else math.inf,
+        hbm_bytes_per_s=(1.0 / b) if b > 0.0 else math.inf,
+        t_dispatch_s=c,
+        n_points=len(pts),
+        max_rel_err=0.0,
+    )
+    worst = 0.0
+    for f, bb, t in pts:
+        if t > 0.0:
+            worst = max(worst, abs(calib.predict_s(f, bb) - t) / t)
+    return dataclasses.replace(calib, max_rel_err=worst)
+
+
+def model_residuals(points, calibration: EcmCalibration | None = None) -> dict:
+    """Model-vs-measured residual report over sweep points (Sec. 7 analog).
+
+    `points` is an iterable of dicts with keys ``flops``, ``hbm_bytes``,
+    ``measured_s`` and optionally ``key`` (a label) and ``model_s`` (the
+    a-priori datasheet prediction).  When `calibration` is None it is fitted
+    from the points themselves (`fit_ecm`).
+
+    Returns ``{"n", "calibration", "mean_abs_rel_err", "max_abs_rel_err",
+    "bias", "per_point"}`` where residuals are calibrated-vs-measured
+    relative errors ``(pred - meas) / meas``, `bias` is their mean (signed),
+    and each per-point entry carries ``{key, measured_s, calibrated_s,
+    rel_err[, model_s]}``.
+    """
+    pts = list(points)
+    if calibration is None:
+        calibration = fit_ecm(
+            (p["flops"], p["hbm_bytes"], p["measured_s"]) for p in pts)
+    per_point = []
+    rels = []
+    for p in pts:
+        pred = calibration.predict_s(p["flops"], p["hbm_bytes"])
+        meas = float(p["measured_s"])
+        rel = (pred - meas) / meas if meas > 0.0 else 0.0
+        entry = {"key": p.get("key", ""), "measured_s": meas,
+                 "calibrated_s": pred, "rel_err": rel}
+        if "model_s" in p:
+            entry["model_s"] = float(p["model_s"])
+        per_point.append(entry)
+        rels.append(rel)
+    return {
+        "n": len(pts),
+        "calibration": dataclasses.asdict(calibration),
+        "mean_abs_rel_err": (sum(abs(r) for r in rels) / len(rels)
+                             if rels else 0.0),
+        "max_abs_rel_err": max((abs(r) for r in rels), default=0.0),
+        "bias": (sum(rels) / len(rels)) if rels else 0.0,
+        "per_point": per_point,
+    }
 
 
 # ---------------------------------------------------------------------------

@@ -188,6 +188,24 @@ class PlanRegistry:
         """Number of entries currently held (including stale ones)."""
         return len(self._entries)
 
+    def stats(self) -> dict:
+        """Entry counts by provenance: total, measured, model, stale.
+
+        "stale" counts entries recorded under a hardware fingerprint other
+        than the current one (they will be pruned at the next save). The
+        sweep harness (`repro.launch.sweep --tune ...`) prints this before
+        and after a bulk warming run so the registry growth is visible.
+        """
+        fp = hw.fingerprint()
+        stale = sum(1 for e in self._entries.values() if e.fingerprint != fp)
+        by_source: dict[str, int] = {}
+        for e in self._entries.values():
+            if e.fingerprint == fp:
+                by_source[e.source] = by_source.get(e.source, 0) + 1
+        return {"total": len(self._entries), "stale": stale,
+                "measured": by_source.get("measured", 0),
+                "model": by_source.get("model", 0)}
+
     def get(self, spec: StencilSpec, grid_shape, word_bytes: int = 4,
             devices_x: int = 1, batch: int = 1,
             fingerprint: str | None = None) -> RegistryEntry | None:

@@ -79,6 +79,7 @@ def _gc(directory: str, keep_last: int) -> None:
 
 
 def all_steps(directory: str) -> list[int]:
+    """Sorted steps with a committed (COMMIT-marked) checkpoint present."""
     out = []
     if not os.path.isdir(directory):
         return out
@@ -90,15 +91,19 @@ def all_steps(directory: str) -> list[int]:
 
 
 def latest_step(directory: str) -> int | None:
+    """Newest committed step in `directory`, or None when empty."""
     steps = all_steps(directory)
     return steps[-1] if steps else None
 
 
 def restore(directory: str, tree_like, *, step: int | None = None,
             sharding_fn: Callable[[str, Any], Any] | None = None):
-    """Restore into the structure of `tree_like` (a pytree of arrays or
-    ShapeDtypeStructs). sharding_fn(name, leaf) -> Sharding places each leaf
-    (e.g. onto a different mesh than the one that saved it)."""
+    """Restore a checkpoint into the structure of `tree_like`.
+
+    `tree_like` is a pytree of arrays or ShapeDtypeStructs;
+    ``sharding_fn(name, leaf) -> Sharding`` places each leaf (e.g. onto a
+    different mesh than the one that saved it). Returns ``(step, tree)``.
+    """
     step = latest_step(directory) if step is None else step
     if step is None:
         raise FileNotFoundError(f"no committed checkpoint in {directory}")
@@ -141,6 +146,7 @@ class AsyncCheckpointer:
         self._error: BaseException | None = None
 
     def save(self, step: int, tree) -> None:
+        """Snapshot `tree` to host and write the checkpoint off-thread."""
         self.wait_pending()
         # snapshot to host memory on the caller's thread (device buffers may
         # be donated/overwritten by the next step)
@@ -157,6 +163,7 @@ class AsyncCheckpointer:
         self._thread.start()
 
     def wait_pending(self) -> None:
+        """Join the in-flight save (if any) and re-raise its error."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None

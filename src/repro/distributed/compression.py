@@ -47,6 +47,7 @@ def compressed_pmean(g, err, axis_name: str):
 
 
 def init_error_state(params):
+    """Zero error-feedback residuals matching the `params` pytree."""
     return jax.tree_util.tree_map(jnp.zeros_like, params)
 
 

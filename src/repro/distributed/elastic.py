@@ -37,6 +37,7 @@ def plan_mesh(n_devices: int) -> tuple[tuple[int, ...], tuple[str, ...]]:
 
 
 def build_mesh(n_devices: int | None = None) -> jax.sharding.Mesh:
+    """Build the `plan_mesh` shape over the (healthy) local device set."""
     n = n_devices if n_devices is not None else len(jax.devices())
     shape, axes = plan_mesh(n)
     return compat.make_mesh(shape, axes)
@@ -55,25 +56,27 @@ class HealthMonitor:
         self._last_beat = {s: now for s in self.slices}
 
     def heartbeat(self, slice_id: str) -> None:
+        """Record a liveness beat from `slice_id` (resets its deadline)."""
         self._last_beat[slice_id] = self.clock()
 
     def healthy_slices(self) -> list[str]:
+        """Slices whose last beat is within the timeout."""
         now = self.clock()
         return [s for s, t in self._last_beat.items()
                 if now - t <= self.timeout_s]
 
     @property
     def degraded(self) -> bool:
+        """True when at least one slice has missed its deadline."""
         return len(self.healthy_slices()) < len(self.slices)
 
 
 def rescale_restore(ckpt_dir: str, tree_like, make_sharding,
                     n_devices: int | None = None):
-    """Rebuild a mesh for the current (possibly reduced) device set and
-    restore the latest checkpoint onto it.
+    """Restore the latest checkpoint onto a mesh for the current device set.
 
-    make_sharding(mesh, name, leaf) -> Sharding for each leaf.
-    Returns (step, state, mesh).
+    Rebuilds the (possibly reduced) mesh first; `make_sharding(mesh, name,
+    leaf)` supplies each leaf's sharding. Returns ``(step, state, mesh)``.
     """
     from repro.distributed import checkpoint
 

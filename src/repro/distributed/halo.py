@@ -66,8 +66,10 @@ def exchange_axis(block, axis_name: str, axis: int, depth: int):
 
 def exchange_2d(block, depth: int, *, axis_z: str, axis_y: str,
                 z_dim: int = -3, y_dim: int = -2):
-    """Two-phase deep-halo exchange: z, then y over the z-extended block
-    (corners included transitively)."""
+    """Two-phase deep-halo exchange: z, then y over the z-extended block.
+
+    Corner halos arrive transitively through the second phase.
+    """
     ndim = block.ndim
     ext = exchange_axis(block, axis_z, z_dim % ndim, depth)
     ext = exchange_axis(ext, axis_y, y_dim % ndim, depth)

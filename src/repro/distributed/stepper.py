@@ -33,14 +33,18 @@ from repro.kernels import stencil_mwd
 
 @dataclasses.dataclass(frozen=True)
 class GridSharding:
+    """How the (z, y, x) stencil grid maps onto a mesh: z->data axes, y->model."""
+
     mesh: jax.sharding.Mesh
 
     @property
     def z_axes(self) -> tuple[str, ...]:
+        """Mesh axes the grid's z dimension is sharded over (flattened)."""
         return tuple(a for a in ("pod", "data") if a in self.mesh.axis_names)
 
     @property
     def y_axis(self) -> str:
+        """Mesh axis the grid's y dimension is sharded over."""
         return "model"
 
     def spec(self, leading: int = 0) -> P:
@@ -48,17 +52,19 @@ class GridSharding:
         return P(*((None,) * leading), self.z_axes, self.y_axis, None)
 
     def sharding(self, leading: int = 0) -> NamedSharding:
+        """NamedSharding of `spec(leading)` on this mesh."""
         return NamedSharding(self.mesh, self.spec(leading))
 
 
 def _extend_coeffs(spec: st.StencilSpec, t_block: int, gs: GridSharding,
                    coeffs):
-    """Inside shard_map: one-time halo exchange + x-pad of the coefficient
-    streams. Coefficients travel in the canonical (stacked arrays, scalar
-    vector) form for EVERY operator; they are time-invariant, so
-    re-exchanging them every super-step (as the naive stepper does) wastes
-    ~N_coeff/N_streams of the halo traffic — hoisting them is a SS Perf
-    iteration."""
+    """One-time halo exchange + x-pad of the coefficients (inside shard_map).
+
+    Coefficients travel in the canonical (stacked arrays, scalar vector)
+    form for EVERY operator; they are time-invariant, so re-exchanging them
+    every super-step (as the naive stepper does) wastes ~N_coeff/N_streams
+    of the halo traffic — hoisting them is a SS Perf iteration.
+    """
     arrays, svec = coeffs
     if not arrays.shape[0]:
         return (arrays, svec)
@@ -70,8 +76,11 @@ def _extend_coeffs(spec: st.StencilSpec, t_block: int, gs: GridSharding,
 
 def _local_super_step(spec: st.StencilSpec, t_block: int, gs: GridSharding,
                       grid_shape, hoisted: bool, cur, prev, coeffs):
-    """Runs inside shard_map on local blocks. hoisted=True: coeffs arrive
-    pre-extended (see _extend_coeffs); only the solution levels exchange."""
+    """Advance one t_block super-step on local blocks (inside shard_map).
+
+    hoisted=True: coeffs arrive pre-extended (see _extend_coeffs); only the
+    solution levels exchange.
+    """
     r = spec.radius
     g = r * t_block
     nz_g, ny_g, nx_g = grid_shape
@@ -198,7 +207,8 @@ def make_super_step(spec: st.StencilSpec, mesh: jax.sharding.Mesh,
     fused MWD kernel launch (the compiled diamond schedule) instead of
     t_block jnp sweeps — one launch per halo exchange. `scalars` carries
     the op's scalar coefficients as static Python floats (the kernel
-    inlines them); required for scalar-coefficient operators."""
+    inlines them); required for scalar-coefficient operators.
+    """
     gs = GridSharding(mesh)
     kwargs = {}
     if plan is not None:
@@ -324,7 +334,8 @@ def run_distributed(spec: st.StencilSpec, mesh, state, coeffs, n_steps: int,
     resolved against the PER-SHARD extended block shape the kernel actually
     launches on (see `local_extended_shape`), with the mesh's real x-axis
     device count, and its D_w is capped at the shard's y extent; an
-    explicit `MWDPlan` whose D_w exceeds the local y extent is rejected."""
+    explicit `MWDPlan` whose D_w exceeds the local y extent is rejected.
+    """
     gs = GridSharding(mesh)
     cur, prev = state
     shape_e = local_extended_shape(spec, mesh, cur.shape, t_block)

@@ -28,7 +28,7 @@ Intra-tile parallelization: x is the full-width lane dimension (never tiled,
 paper's leading-dimension rule); y/z vectorize across sublanes. HBM traffic
 per pass is exactly the Eq. 5 code balance: each stream crosses HBM once per
 D_w/(2R) time steps; the fused launch additionally skips the inactive edge
-tiles that the per-row mode streams (benchmarks/traffic.py counts both).
+tiles that the per-row mode streams (repro/core/traffic.py counts both).
 
 Geometry (see DESIGN.md): update tau processes padded z-rows
 [N_F*j - (tau+1)R, N_F*(j+1) - (tau+1)R), i.e. buffer rows

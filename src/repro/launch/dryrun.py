@@ -1,10 +1,14 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Records memory_analysis / cost_analysis / collective-schedule numbers for
+each cell into ``results/dryrun.json``; `benchmarks/experiments.py` folds
+them into the dry-run and roofline tables of ``docs/REPRODUCTION.md``.
+The ``XLA_FLAGS`` assignment below MUST precede any other import (jax locks
+the device count on first init), which is why it sits above them.
+"""
+
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
-# Multi-pod dry-run: .lower().compile() for every (architecture x input
-# shape x mesh) cell, recording memory_analysis / cost_analysis / collective
-# schedule for EXPERIMENTS.md SS Dry-run & SS Roofline. The two lines above
-# MUST precede any other import (jax locks the device count on first init).
 
 import argparse      # noqa: E402
 import dataclasses   # noqa: E402
@@ -40,6 +44,7 @@ GIRIH_ARCHS = tuple(f"girih-{s}" for s in stc.SPECS)
 
 
 def mesh_name(multi_pod: bool) -> str:
+    """Display/record name of the pod (16x16) or multi-pod (2x16x16) mesh."""
     return "2x16x16" if multi_pod else "16x16"
 
 
@@ -195,6 +200,12 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
              probe: bool = True, verbose: bool = True, t_block: int = 0,
              hoisted: bool = False, variant: dict | None = None,
              tag: str = ""):
+    """Lower + compile one dry-run cell and extract its roofline record.
+
+    LM cells additionally run the unrolled small-L cost probe (see
+    `probe_lm_cell`) where the compile budget allows; girih (stencil) cells
+    lower the distributed super-step. Returns a `roofline.DryrunResult`.
+    """
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_dev = 512 if multi_pod else 256
     t0 = time.time()
@@ -279,6 +290,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
 
 
 def iter_cells(arch_sel: str, shape_sel: str):
+    """Yield (arch, shape, skip_reason) cells matching the CLI selectors."""
     archs = list(configs.ARCH_IDS) + list(GIRIH_ARCHS) \
         if arch_sel == "all" else [arch_sel]
     for arch in archs:
@@ -298,6 +310,7 @@ def iter_cells(arch_sel: str, shape_sel: str):
 
 
 def main():
+    """CLI entry point: run the selected cells, appending to --out."""
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="all",
                     help="arch id, girih-<stencil> (paper, registered custom "
@@ -317,7 +330,7 @@ def main():
                          "0 = auto (8 for the >=7168-wide giants)")
     ap.add_argument("--cell-timeout", type=int, default=1800,
                     help="seconds per cell before recording a timeout")
-    # hillclimb variant knobs (EXPERIMENTS.md SS Perf)
+    # perf-variant knobs (compared via the docs/REPRODUCTION.md roofline)
     ap.add_argument("--tag", default="", help="variant label in notes")
     ap.add_argument("--t-block", type=int, default=0, help="girih t_block")
     ap.add_argument("--hoisted", action="store_true",

@@ -1,5 +1,8 @@
-"""Production mesh construction (importing this module never touches JAX
-device state — meshes are built inside functions only)."""
+"""Production mesh construction.
+
+Importing this module never touches JAX device state — meshes are built
+inside functions only, so launchers can set ``XLA_FLAGS`` first.
+"""
 
 from __future__ import annotations
 
@@ -26,4 +29,5 @@ def batch_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
 
 
 def model_axis(mesh: jax.sharding.Mesh) -> str:
+    """Mesh axis model-parallel (TP) parameters are sharded over."""
     return "model"

@@ -136,6 +136,8 @@ def analytic_hbm_bytes(cfg, shape_info: dict, n_params: int, n_active: int,
 
 @dataclasses.dataclass
 class DryrunResult:
+    """One compiled dry-run cell's roofline record (JSON-serializable)."""
+
     arch: str
     shape: str
     mesh: str
@@ -160,6 +162,7 @@ class DryrunResult:
         return self.model_flops_global / hlo_global if hlo_global else 0.0
 
     def to_json(self) -> dict:
+        """Flat JSON form consumed by benchmarks/experiments.py tables."""
         return {
             "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
             "n_devices": self.n_devices,
@@ -186,6 +189,7 @@ def analyze(compiled, *, arch: str, shape: str, mesh_name: str,
             n_devices: int, model_flops: float, model_bytes: float,
             lower_s: float, compile_s: float, notes: str = "",
             chip: hw.ChipSpec = hw.V5E) -> DryrunResult:
+    """Extract the full roofline record from one compiled executable."""
     ca = compiled.cost_analysis()
     flops = float(ca.get("flops", 0.0))
     byts = float(ca.get("bytes accessed", 0.0))

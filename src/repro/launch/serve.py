@@ -39,9 +39,9 @@ from repro.training import steps as tsteps
 
 def prefill_into_cache(cfg, params, tokens, gen: int,
                        cache_len: int | None = None):
-    """Prefill by stepping the decode path (simple, exact; a fused chunked
-    prefill-into-cache is the serving-optimized variant).
+    """Prefill by stepping the decode path (simple and exact).
 
+    A fused chunked prefill-into-cache is the serving-optimized variant.
     The cache is sized for the WHOLE request — prompt plus the `gen` tokens
     the decode loop will append. (It used to be a fixed prompt+64, which
     silently overflowed — wrapped or clobbered positions — as soon as
@@ -257,6 +257,7 @@ def build_parser() -> argparse.ArgumentParser:
 
 
 def main(argv=None):
+    """CLI entry point: stencil request-queue server or LM decode loop."""
     args = build_parser().parse_args(argv)
 
     if args.op_module:

@@ -31,9 +31,12 @@ from repro.training import steps as tsteps
 
 
 class StepGuard:
-    """Deadline-based straggler accounting: flags steps slower than
-    `factor` x the rolling median (on clusters: triggers scheduler
-    rebalancing / health checks; here: logged + counted)."""
+    """Deadline-based straggler accounting over the train-step clock.
+
+    Flags steps slower than `factor` x the rolling median; on clusters this
+    triggers scheduler rebalancing / health checks, here it is logged and
+    counted.
+    """
 
     def __init__(self, factor: float = 3.0):
         self.times: list[float] = []
@@ -41,6 +44,7 @@ class StepGuard:
         self.stragglers = 0
 
     def observe(self, dt: float) -> bool:
+        """Record one step time; True if it crossed the straggler deadline."""
         slow = (len(self.times) >= 5
                 and dt > self.factor * float(np.median(self.times)))
         self.times.append(dt)
@@ -50,6 +54,7 @@ class StepGuard:
 
 
 def main(argv=None):
+    """CLI entry point: build mesh, restore/init state, run the step loop."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b",
                     choices=list(configs.ARCH_IDS))

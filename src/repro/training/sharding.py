@@ -7,7 +7,8 @@ Rules:
   decode KV cache        -> batch axes; long-context (B==1) -> sequence over
                             'data' (sequence parallelism / flash-decoding)
 A dimension falls back to replication when not divisible by its mesh axis
-(e.g. gemma3's 4 heads on a 16-way model axis — see EXPERIMENTS.md Perf).
+(e.g. gemma3's 4 heads on a 16-way model axis — see the roofline tables
+in docs/REPRODUCTION.md).
 """
 
 from __future__ import annotations
@@ -61,7 +62,7 @@ def constrain_like_params(tree, spec_tree):
 
     Keeping per-microbatch grads and the accumulation buffer SHARDED is what
     turns the naive full-size-all-reduce-then-slice gradient path into
-    sharded accumulation (reduce-scatter-like); see EXPERIMENTS.md SS Perf.
+    sharded accumulation (reduce-scatter-like); see docs/REPRODUCTION.md.
     No-op outside a mesh context.
     """
     mesh = compat.get_abstract_mesh()

@@ -1,0 +1,298 @@
+"""Sweep harness + calibration + report rendering (the experiment subsystem).
+
+Covers: sweep-point key schema, resume-skips-done (zero re-measurement),
+stale-fingerprint re-measurement, `fit_ecm` round-trip on synthetic points,
+the residual-report shape, report rendering on a canned results fixture
+(golden + deterministic), the `--check` drift gate, and the docs link
+checker.
+"""
+
+import dataclasses
+import json
+import math
+import os
+
+import pytest
+
+from repro.core import models, registry as reg, stencils as st
+from repro.launch import sweep
+
+
+# ---------------------------------------------------------------------------
+# point keys
+# ---------------------------------------------------------------------------
+
+def test_point_key_schema():
+    spec = st.SPECS["7pt-const"]
+    key = sweep.point_key(spec, (6, 10, 8), 2, True, 1)
+    assert key == f"7pt-const@{spec.fingerprint}|6x10x8|s2|fused|b1|w4"
+    assert sweep.point_key(spec, (6, 10, 8), 2, False, 1).count("|row|") == 1
+    assert sweep.point_key(spec, (6, 10, 8), 2, True, 4).endswith("|b4|w4")
+    assert sweep.point_key(spec, (6, 10, 8), 2, True, 1,
+                           distributed=True).endswith("|dist")
+    # every axis of the lattice must separate keys
+    keys = {
+        sweep.point_key(spec, g, s, f, b, w, d)
+        for g in [(6, 10, 8), (8, 10, 8)] for s in (2, 3)
+        for f in (True, False) for b in (1, 2) for w in (4, 8)
+        for d in (False, True)
+    }
+    assert len(keys) == 2 * 2 * 2 * 2 * 2 * 2
+    # a different operator with the same display name cannot collide
+    other = dataclasses.replace(spec, taps=spec.taps[:-1])
+    assert sweep.point_key(other, (6, 10, 8), 2, True, 1) != key
+
+
+def test_ladder_is_cubes():
+    assert sweep.ladder((8, 12)) == [(8, 8, 8), (12, 12, 12)]
+
+
+# ---------------------------------------------------------------------------
+# fit_ecm / model_residuals
+# ---------------------------------------------------------------------------
+
+def test_fit_ecm_roundtrip_on_synthetic_points():
+    p, bw, disp = 5e9, 1.2e9, 2e-4
+    pts = [(f, b, f / p + b / bw + disp)
+           for f, b in [(1e6, 2e6), (4e6, 1e6), (2e6, 8e6), (9e6, 3e6)]]
+    c = models.fit_ecm(pts)
+    assert c.flops_per_s == pytest.approx(p, rel=1e-6)
+    assert c.hbm_bytes_per_s == pytest.approx(bw, rel=1e-6)
+    assert c.t_dispatch_s == pytest.approx(disp, rel=1e-6)
+    assert c.n_points == 4 and c.max_rel_err < 1e-9
+    f, b, t = pts[0]
+    assert c.predict_s(f, b) == pytest.approx(t, rel=1e-9)
+
+
+def test_fit_ecm_clamps_unobservable_terms():
+    # all time explained by bytes: the flops rate must clamp to "infinite"
+    pts = [(0.0, 1e6, 1e-3), (0.0, 2e6, 2e-3), (0.0, 3e6, 3e-3)]
+    c = models.fit_ecm(pts)
+    assert c.flops_per_s == math.inf
+    assert c.hbm_bytes_per_s == pytest.approx(1e9, rel=1e-6)
+    assert c.predict_s(1e12, 1e6) == pytest.approx(1e-3, rel=1e-6)
+
+
+def test_fit_ecm_empty_raises():
+    with pytest.raises(ValueError):
+        models.fit_ecm([])
+
+
+def test_model_residuals_shape():
+    pts = [{"key": f"k{i}", "flops": 1e6 * (i + 1),
+            "hbm_bytes": 2e6 * (i + 1), "measured_s": 1e-3 * (i + 1),
+            "model_s": 1e-4} for i in range(4)]
+    rep = models.model_residuals(pts)
+    assert set(rep) == {"n", "calibration", "mean_abs_rel_err",
+                        "max_abs_rel_err", "bias", "per_point"}
+    assert rep["n"] == 4 and len(rep["per_point"]) == 4
+    e = rep["per_point"][0]
+    assert set(e) == {"key", "measured_s", "calibrated_s", "rel_err",
+                      "model_s"}
+    assert rep["max_abs_rel_err"] >= rep["mean_abs_rel_err"] >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# the sweep driver: measure, resume, staleness
+# ---------------------------------------------------------------------------
+
+def _tiny_sweep(tmp_path, monkeypatch, **kw):
+    monkeypatch.setenv(reg.ENV_VAR, str(tmp_path / "plans.json"))
+    path = str(tmp_path / "sweep.json")
+    return sweep.run_sweep([st.SPECS["7pt-const"]], [(6, 10, 8)],
+                           results_path=path, n_steps=2, reps=1,
+                           verbose=False, **kw), path
+
+
+@pytest.mark.slow
+def test_sweep_measures_then_resumes_to_zero(tmp_path, monkeypatch):
+    s1, path = _tiny_sweep(tmp_path, monkeypatch)
+    assert (s1["n_measured"], s1["n_skipped"]) == (1, 0)
+    point = json.load(open(path))["points"][next(iter(s1["points"]))]
+    for field in ("measured", "traffic", "model", "plan", "flops", "lups",
+                  "hw_fingerprint"):
+        assert field in point
+    assert point["measured"]["t_s"] > 0 and point["measured"]["glups"] > 0
+    assert point["traffic"]["b_per_lup"] > 0
+    assert point["model"]["energy_j"]["total"] > 0
+
+    # second run: resumed, ZERO re-measured points
+    s2, _ = _tiny_sweep(tmp_path, monkeypatch)
+    assert (s2["n_measured"], s2["n_skipped"]) == (0, 1)
+
+    # a stale hardware fingerprint is a miss: the point re-measures
+    raw = json.load(open(path))
+    for p in raw["points"].values():
+        p["hw_fingerprint"] = "somewhere-else"
+    json.dump(raw, open(path, "w"))
+    s3, _ = _tiny_sweep(tmp_path, monkeypatch)
+    assert (s3["n_measured"], s3["n_skipped"]) == (1, 0)
+
+
+@pytest.mark.slow
+def test_distributed_point_is_coherent(tmp_path, monkeypatch):
+    """The distributed leg's model columns must describe the SAME run as its
+    measurement: global useful LUPs, totals over devices and super-steps,
+    and a plan resolved from the registry instance the sweep was given."""
+    monkeypatch.setenv(reg.ENV_VAR, str(tmp_path / "unused-default.json"))
+    registry = reg.PlanRegistry(str(tmp_path / "explicit.json"))
+    ps = sweep.PointSpec(st.SPECS["7pt-const"], (6, 10, 8), 2, True, 1, 4,
+                         distributed=True)
+    point = sweep.run_point(ps, registry, reps=1, warmup=1)
+    m = point["measured"]
+    lups = 6 * 10 * 8 * m["n_super_steps"] * m["t_block"]
+    assert point["lups"] == pytest.approx(lups)
+    assert m["glups"] == pytest.approx(lups / m["t_s"] / 1e9)
+    assert point["model"]["glups"] == pytest.approx(
+        lups / point["model"]["t_s"] / 1e9)
+    assert point["traffic"]["b_per_lup"] == pytest.approx(
+        point["traffic"]["hbm_bytes"] / lups)
+    # the fallback plan memoized in the EXPLICIT registry, not the default
+    assert len(registry._memo) == 1
+    assert not os.path.exists(str(tmp_path / "unused-default.json"))
+
+
+@pytest.mark.slow
+def test_sweep_resume_consults_sibling_files(tmp_path, monkeypatch):
+    _, path = _tiny_sweep(tmp_path, monkeypatch)
+    os.rename(path, str(tmp_path / "sweep-earlier.json"))
+    s2, _ = _tiny_sweep(tmp_path, monkeypatch)   # fresh target file
+    assert (s2["n_measured"], s2["n_skipped"]) == (0, 1)
+
+
+@pytest.mark.slow
+def test_sweep_cli_expect_cached_gate(tmp_path, monkeypatch):
+    monkeypatch.setenv(reg.ENV_VAR, str(tmp_path / "plans.json"))
+    path = str(tmp_path / "sweep.json")
+    args = ["--stencil", "7pt-const", "--grid", "6,10,8", "--steps", "2",
+            "--reps", "1", "--results", path]
+    s1 = sweep.main(args)
+    assert s1["n_measured"] == 1
+    s2 = sweep.main(args + ["--expect-cached"])      # resumed: passes
+    assert s2["n_measured"] == 0
+    with pytest.raises(SystemExit):
+        sweep.main(args + ["--expect-cached", "--no-resume"])
+
+
+# ---------------------------------------------------------------------------
+# report rendering (benchmarks/experiments.py)
+# ---------------------------------------------------------------------------
+
+def _canned_point(key, stencil, grid, mode, t_s, *, batch=1, dist=False):
+    import numpy as np
+
+    lups = float(np.prod(grid)) * 2 * batch
+    measured = {"t_s": t_s, "glups": lups / t_s / 1e9}
+    if dist:
+        measured.update(n_devices=1, t_block=2, n_super_steps=1,
+                        local_extended_shape=[g + 4 for g in grid])
+    return {
+        "key": key, "stencil": stencil, "op_fingerprint": "fp", "grid": list(grid),
+        "n_steps": 2, "mode": mode, "batch": batch, "word_bytes": 4,
+        "distributed": dist,
+        "plan": {"d_w": 8, "n_f": 2, "tg_x": 1, "fused": mode == "fused"},
+        "plan_source": "model", "lups": lups, "flops": 7.0 * lups,
+        "measured": measured,
+        "traffic": {"hbm_bytes": 48.0 * lups, "b_per_lup": 48.0,
+                    "launches": 1},
+        "model": {"bc_eq5": 4.0, "bc_spatial": 12.0, "t_s": t_s / 100.0,
+                  "glups": lups / (t_s / 100.0) / 1e9,
+                  "energy_j": {"core": 1e-8, "hbm": 2e-5, "static": 3e-4,
+                               "total": 3.2e-4}},
+        "hw_fingerprint": "fp-test",
+    }
+
+
+@pytest.fixture
+def canned_results(tmp_path):
+    pts = [
+        _canned_point("7pt-const@fp|8x8x8|s2|fused|b1|w4", "7pt-const",
+                      (8, 8, 8), "fused", 1e-3),
+        _canned_point("7pt-const@fp|8x8x8|s2|row|b1|w4", "7pt-const",
+                      (8, 8, 8), "row", 2e-3),
+        _canned_point("7pt-const@fp|12x12x12|s2|fused|b1|w4", "7pt-const",
+                      (12, 12, 12), "fused", 3e-3),
+        _canned_point("7pt-const@fp|8x8x8|s2|fused|b2|w4", "7pt-const",
+                      (8, 8, 8), "fused", 1.5e-3, batch=2),
+        _canned_point("7pt-const@fp|8x8x8|s2|fused|b1|w4|dist", "7pt-const",
+                      (8, 8, 8), "fused", 4e-3, dist=True),
+    ]
+    results_dir = tmp_path / "results"
+    results_dir.mkdir()
+    with open(results_dir / "sweep-canned.json", "w") as f:
+        json.dump({"version": 1, "hw_fingerprint": "fp-test",
+                   "points": {p["key"]: p for p in pts}}, f)
+    return str(results_dir)
+
+
+def test_report_golden_on_canned_results(canned_results):
+    from benchmarks import experiments
+
+    text = experiments.render(canned_results)
+    # all four paper-study sections render, plus the distributed leg
+    for heading in ("## 1. Throughput vs grid size",
+                    "## 2. Memory traffic vs grid size",
+                    "## 3. Energy vs tuning choice",
+                    "## 4. Model validation",
+                    "## 5. Distributed super-stepper leg"):
+        assert heading in text, heading
+    # golden rows: formatting of one throughput row and one B/LUP row
+    assert "| 8x8x8 | fused | 1 | dw8.nf2 | 0.00102 | 0.10 |" in text
+    assert "| 8x8x8 | fused | 8 | 4.00 | 48.00 | 12.00 | -300% |" in text
+    # batch column separates the B=2 point
+    assert "| 8x8x8 | fused | 2 | dw8.nf2 |" in text
+    # calibration fitted from the 4 non-distributed points
+    assert "| points | 4 |" in text
+    # deterministic: rendering twice is byte-identical
+    assert text == experiments.render(canned_results)
+
+
+def test_report_check_mode(canned_results, tmp_path):
+    from benchmarks import experiments
+
+    out = str(tmp_path / "REPRODUCTION.md")
+    assert experiments.main(["--results", canned_results, "--out", out]) == 0
+    assert experiments.main(["--results", canned_results, "--out", out,
+                             "--check"]) == 0
+    with open(out, "a") as f:
+        f.write("tampered\n")
+    assert experiments.main(["--results", canned_results, "--out", out,
+                             "--check"]) == 2
+    assert experiments.main(["--results", canned_results,
+                             "--out", str(tmp_path / "missing.md"),
+                             "--check"]) == 2
+
+
+def test_committed_report_matches_committed_results():
+    """The repo-level drift gate, runnable as a plain test: docs/ must be
+    regenerated whenever results/ or the renderer changes."""
+    from benchmarks import experiments
+
+    repo = os.path.join(os.path.dirname(__file__), "..")
+    if not os.path.exists(os.path.join(repo, "docs", "REPRODUCTION.md")):
+        pytest.skip("no committed report")
+    text = experiments.render(os.path.join(repo, "results"))
+    with open(os.path.join(repo, "docs", "REPRODUCTION.md")) as f:
+        assert f.read() == text, (
+            "docs/REPRODUCTION.md drifts from results/ regeneration; run "
+            "python -m benchmarks.experiments and commit the result")
+
+
+def test_check_links(tmp_path):
+    from benchmarks import experiments
+
+    docs = tmp_path / "docs"
+    docs.mkdir()
+    (docs / "ok.md").write_text("[good](other.md) [ext](https://x.y/z) "
+                                "[anchor](#here)")
+    (docs / "other.md").write_text("[broken](missing.md)")
+    problems = experiments.check_links(roots=("docs",),
+                                       repo_root=str(tmp_path))
+    assert len(problems) == 1 and "missing.md" in problems[0]
+
+
+def test_repo_docs_links_resolve():
+    from benchmarks import experiments
+
+    repo = os.path.join(os.path.dirname(__file__), "..")
+    assert experiments.check_links(repo_root=repo) == []
