@@ -1,0 +1,326 @@
+"""Padding classes + masked operator variants for ragged batched serving.
+
+`ops.mwd_batched` fuses B requests into one launch only when every grid has
+the SAME shape.  Real mixed traffic rarely obliges, so the serving tier maps
+each request's grid to a **padding class** — the per-axis next rung of a
+`PaddingLadder` (next power of two by default, or a configurable rung list) —
+and requests in the same class share one launch at the class shape.
+
+Padding a Dirichlet stencil grid is not free: the original high-boundary
+ring (width R, frozen by the sweep's carried frame) becomes *interior* of
+the padded grid and would start evolving, corrupting every cell within
+``n_steps * R`` of it.  `pad_problem` therefore builds a **masked** problem
+whose frozen region — everything outside the original interior — reproduces
+the Dirichlet dynamics exactly, so the padded batched launch is **bitwise
+equal**, per request, to its unpadded sequential `ops.mwd` run:
+
+* 1st-order ops: every coefficient stream is masked per cell — original
+  values on the original interior, and on the frozen region the center
+  group's stream is 1 while every other stream is 0, so a frozen cell
+  updates to ``1*cur + 0*S + ...`` = `cur` (compile-time scalar
+  coefficients are promoted to per-cell streams by `masked_variant`; the
+  promoted stream holds the exact float32 the kernel would have inlined, so
+  interior arithmetic is bit-identical).
+* 2nd-order ops (``U = 2V - U_prev + scale*L``): only the `scale` stream is
+  masked to 0 on the frozen region, and the padded `prev` is rewritten to
+  `cur` there, so a frozen cell updates to ``2c - c + 0`` = `c` exactly
+  (both operations are exact in IEEE arithmetic).  A const or absent
+  `scale` is promoted/synthesized the same way as 1st-order streams.
+
+The only inexactness is the additive/multiplicative identity on *frozen*
+cells holding ``-0.0`` (``-0.0 + 0.0 == +0.0``); interior cells — the cells
+a request actually computes — take the same bits as the sequential run.
+
+`masked_variant(op)` returns `op` itself whenever masking is pure data
+(all-array 1st-order taps, or 2nd-order with an array `scale`), so the
+plan-registry fingerprint, kernels, and jit caches are shared with the
+unpadded path; only scalar-coefficient ops get a structurally derived
+``<name>+mask`` twin.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+from repro.core import ir
+from repro.core.ir import Coeff, StencilOp, Tap
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (n >= 1)."""
+    if n < 1:
+        raise ValueError(f"extent must be >= 1, got {n}")
+    return 1 << (n - 1).bit_length()
+
+
+@dataclasses.dataclass(frozen=True)
+class PaddingLadder:
+    """Per-axis padding-class boundaries for ragged batching.
+
+    ``mode`` is ``"exact"`` (no padding: every shape is its own class — the
+    PR-4 behavior), ``"pow2"`` (next power of two per axis), or ``"rungs"``
+    with an explicit sorted `rungs` tuple (an extent beyond the last rung
+    keeps its exact size, i.e. forms its own class).
+    """
+
+    mode: str = "exact"
+    rungs: tuple[int, ...] = ()
+
+    def __post_init__(self):
+        if self.mode not in ("exact", "pow2", "rungs"):
+            raise ValueError(f"unknown ladder mode {self.mode!r}")
+        if self.mode == "rungs":
+            if not self.rungs:
+                raise ValueError("rungs mode needs at least one rung")
+            object.__setattr__(self, "rungs",
+                               tuple(sorted(int(r) for r in self.rungs)))
+            if self.rungs[0] < 1:
+                raise ValueError(f"rungs must be >= 1, got {self.rungs}")
+
+    def padded_extent(self, n: int) -> int:
+        """Class extent of one axis: the first rung >= n (n itself if none)."""
+        if n < 1:
+            raise ValueError(f"extent must be >= 1, got {n}")
+        if self.mode == "exact":
+            return n
+        if self.mode == "pow2":
+            return next_pow2(n)
+        for r in self.rungs:
+            if r >= n:
+                return r
+        return n
+
+    def padded_shape(self, shape) -> tuple[int, ...]:
+        """Padding class of a grid: per-axis `padded_extent`."""
+        return tuple(self.padded_extent(int(n)) for n in shape)
+
+
+EXACT = PaddingLadder("exact")
+POW2 = PaddingLadder("pow2")
+
+
+def parse_ladder(spec) -> PaddingLadder:
+    """CLI/ config form -> `PaddingLadder`.
+
+    Accepts a `PaddingLadder` (returned as-is), None / ``"exact"``,
+    ``"pow2"``, or a comma-separated rung list like ``"8,16,32"``.
+    """
+    if isinstance(spec, PaddingLadder):
+        return spec
+    if spec is None or spec == "exact":
+        return EXACT
+    if spec == "pow2":
+        return POW2
+    return PaddingLadder("rungs", tuple(int(x) for x in str(spec).split(",")))
+
+
+# ---------------------------------------------------------------------------
+# Masked operator variants
+# ---------------------------------------------------------------------------
+
+# Slot sources of the masked op's coefficient streams: where the per-cell
+# values on the ORIGINAL INTERIOR come from. The frozen-region value is the
+# per-slot freeze constant (1.0 for the center group of a 1st-order op,
+# 0.0 everywhere else).
+#   ("array", k)  -> original stacked stream slot k
+#   ("const", j)  -> broadcast of original scalar slot j
+#   ("value", v)  -> broadcast of the literal v (synthesized center tap)
+
+
+@dataclasses.dataclass(frozen=True)
+class MaskRecipe:
+    """How to build a masked problem for one operator (see `masked_variant`)."""
+
+    op: StencilOp                       # the op the padded launch runs
+    sources: tuple[tuple, ...]          # per masked-array-slot value source
+    freezes: tuple[float, ...]          # per-slot frozen-region constant
+    scalar_map: tuple[int, ...]         # original scalar slots kept, in order
+
+
+def _center_coeff(op: StencilOp) -> Coeff | None:
+    for t in op.taps:
+        if t.offset == (0, 0, 0):
+            return t.coeff
+    return None
+
+
+def _promote_taps(op: StencilOp):
+    """Every tap coefficient -> a fresh array slot (group order preserved).
+
+    Returns ``(new_taps, sources)`` where slot i of the promoted op is
+    described by sources[i]. Distinct original sources map to distinct slots
+    in first-appearance order, so `op.groups` — and with it the generated
+    sweep's association order — is unchanged.
+    """
+    slot_of: dict[Coeff, int] = {}
+    sources: list[tuple] = []
+    new_taps = []
+    for t in op.taps:
+        if t.coeff not in slot_of:
+            slot_of[t.coeff] = len(sources)
+            sources.append((t.coeff.kind, t.coeff.index))
+        new_taps.append(Tap(t.dz, t.dy, t.dx, ir.array(slot_of[t.coeff])))
+    return tuple(new_taps), tuple(sources)
+
+
+@functools.lru_cache(maxsize=None)
+def mask_recipe(op: StencilOp) -> MaskRecipe:
+    """Masking strategy for `op` (cached; see the module docstring).
+
+    The returned recipe's `op` equals the input whenever masking needs no
+    structural change; otherwise it is the derived ``<name>+mask`` twin.
+    """
+    all_scalars = tuple(range(op.n_scalars))
+    if op.time_order == 2:
+        # The leading 2V - prev term freezes by data alone (prev := cur on
+        # the frozen region); only the scale stream must be masked to 0.
+        if op.scale is not None and op.scale.kind == "array":
+            sources = tuple(("array", k) for k in range(op.n_coeff_arrays))
+            return MaskRecipe(op, sources, (0.0,) * len(sources), all_scalars)
+        if op.scale is not None:        # const scale -> promoted array slot
+            slot = op.n_coeff_arrays
+            sources = tuple(("array", k) for k in range(op.n_coeff_arrays))
+            sources += ((op.scale.kind, op.scale.index),)
+            kept = _renumbered_scalars(op, drop={op.scale.index})
+            mop = dataclasses.replace(
+                op, name=op.name + "+mask",
+                taps=_remap_const_taps(op.taps, kept),
+                scale=ir.array(slot), default_scalars=None)
+            return MaskRecipe(mop, sources, (0.0,) * len(sources), kept)
+        # no scale: L is added bare, so every tap group must freeze to 0
+        taps, sources = _promote_taps(op)
+        mop = dataclasses.replace(op, name=op.name + "+mask", taps=taps,
+                                  default_scalars=None)
+        return MaskRecipe(mop, sources, (0.0,) * len(sources), ())
+
+    center = _center_coeff(op)
+    center_alone = any(len(ts) == 1 and ts[0].offset == (0, 0, 0)
+                       for _, ts in op.groups)
+    if center is not None and not center_alone:
+        # the center tap shares its coefficient group with off-center taps:
+        # freezing that stream to 1 would also scale the neighbors, and
+        # splitting the group changes the sweep's association order (no
+        # longer bitwise). No sound mask exists — serve such ops unpadded.
+        raise ValueError(
+            f"{op.name}: cannot build a masked padding variant — the center "
+            "tap shares its coefficient group with off-center taps; serve "
+            "this operator with an exact padding ladder")
+    if center is not None and all(t.coeff.kind == "array" for t in op.taps):
+        # pure-data masking: same op, center stream freezes to 1, rest to 0
+        sources = tuple(("array", k) for k in range(op.n_coeff_arrays))
+        freezes = tuple(1.0 if k == center.index else 0.0
+                        for k in range(op.n_coeff_arrays))
+        return MaskRecipe(op, sources, freezes, all_scalars)
+    taps, sources = _promote_taps(op)
+    if center is None:
+        # synthesize a frozen-identity center tap (appended LAST so the
+        # original groups' association order is unchanged; its interior
+        # contribution is an exact trailing +0.0)
+        taps += (Tap(0, 0, 0, ir.array(len(sources))),)
+        sources += (("value", 0.0),)
+        center_slot = len(sources) - 1
+    else:
+        promoted = {s: i for i, s in enumerate(sources)}
+        center_slot = promoted[(center.kind, center.index)]
+    freezes = tuple(1.0 if i == center_slot else 0.0
+                    for i in range(len(sources)))
+    mop = dataclasses.replace(op, name=op.name + "+mask", taps=taps,
+                              default_scalars=None)
+    return MaskRecipe(mop, sources, freezes, ())
+
+
+def _renumbered_scalars(op: StencilOp, drop: set[int]) -> tuple[int, ...]:
+    """Original scalar slots surviving a promotion, in ascending order."""
+    used = sorted({t.coeff.index for t in op.taps
+                   if t.coeff.kind == "const"} - drop)
+    return tuple(used)
+
+
+def _remap_const_taps(taps, kept: tuple[int, ...]):
+    """Renumber const slots to the kept-and-compacted numbering."""
+    new_index = {orig: i for i, orig in enumerate(kept)}
+    out = []
+    for t in taps:
+        if t.coeff.kind == "const":
+            out.append(Tap(t.dz, t.dy, t.dx, ir.const(new_index[t.coeff.index])))
+        else:
+            out.append(t)
+    return tuple(out)
+
+
+def masked_variant(op: StencilOp) -> StencilOp:
+    """The operator a padded batched launch runs for `op` (often `op` itself)."""
+    return mask_recipe(op).op
+
+
+# ---------------------------------------------------------------------------
+# Building the padded problem
+# ---------------------------------------------------------------------------
+
+def pad_problem(op: StencilOp, state, coeffs, padded_shape):
+    """Embed one request in a padding-class grid with frozen-halo masking.
+
+    Returns ``(masked_op, (cur_p, prev_p), packed_coeffs_p)`` such that
+    running `masked_op` on the padded problem for any ``n_steps >= 1`` and
+    cropping with `crop_state` is bitwise-equal to running `op` on the
+    original problem.  `padded_shape` must dominate the grid per axis.
+    """
+    import jax.numpy as jnp
+
+    recipe = mask_recipe(op)
+    arrays, scalars = ir.split_coeffs(op, coeffs)
+    cur, prev = state
+    shape = tuple(cur.shape)
+    if any(p < n for p, n in zip(padded_shape, shape)):
+        raise ValueError(f"{op.name}: padded shape {tuple(padded_shape)} "
+                         f"does not dominate the grid {shape}")
+    widths = [(0, p - n) for p, n in zip(padded_shape, shape)]
+    r = op.radius
+    nz, ny, nx = shape
+    mask = jnp.zeros(tuple(padded_shape), bool)
+    mask = mask.at[r:nz - r, r:ny - r, r:nx - r].set(True)
+
+    def pad(a):
+        return jnp.pad(a, widths)
+
+    cur_p = pad(cur)
+    prev_p = pad(prev)
+    if op.time_order == 2:
+        # frozen cells update as 2c - p (+ 0): exact identity iff p == c
+        prev_p = jnp.where(mask, prev_p, cur_p)
+
+    streams = []
+    for source, freeze in zip(recipe.sources, recipe.freezes):
+        kind = source[0]
+        if kind == "array":
+            base = pad(arrays[source[1]])
+        elif kind == "const":
+            base = jnp.full(tuple(padded_shape), scalars[source[1]], cur.dtype)
+        else:                           # ("value", v): synthesized center tap
+            base = jnp.full(tuple(padded_shape), source[1], cur.dtype)
+        streams.append(jnp.where(mask, base,
+                                 jnp.asarray(freeze, cur.dtype)))
+    stacked = jnp.stack(streams) if streams else None
+    kept = tuple(scalars[j] for j in recipe.scalar_map)
+    return recipe.op, (cur_p, prev_p), ir.join_coeffs(recipe.op, stacked, kept)
+
+
+def crop_state(state, shape):
+    """Crop one (cur, prev) pair back to the request's original grid."""
+    nz, ny, nx = shape
+    return tuple(a[:nz, :ny, :nx] for a in state)
+
+
+def padding_waste(shapes, padded_shape) -> float:
+    """Padded-cells overhead of one batch: extra cells / real cells.
+
+    0.0 means every request fit its class exactly; 1.0 means the launch
+    computed twice the requested cells. The telemetry exports this per batch.
+    """
+    import math
+
+    shapes = [tuple(s) for s in shapes]
+    real = sum(math.prod(s) for s in shapes)
+    padded = len(shapes) * math.prod(padded_shape)
+    return (padded - real) / real if real else 0.0

@@ -1,4 +1,4 @@
-"""Dynamic tile scheduler (paper Sec. 4.2.3).
+"""Dynamic tile scheduler (paper Sec. 4.2.3) + serving queue policy.
 
 A multi-producer multi-consumer FIFO of ready tiles: when a thread group
 finishes a tile it pushes any dependents whose last unmet dependency it was.
@@ -9,12 +9,22 @@ the queue, others keep draining it).
 The scheduler is host-side and generic over the work executor, so it drives
 (a) the CPU jnp executor in tests, (b) per-device-group dispatch in the
 distributed stepper, and (c) async checkpoint workers.
+
+The second half of this module is the **serving queue policy** consumed by
+`repro.launch.serve`: a two-lane (interactive/batch) bounded queue with
+admission control and backpressure (`LaneQueue`), the deadline-aware
+batch-window close rule (`window_close_s`), and the per-bucket launch-time
+estimator (`ServiceEstimator`) that feeds the batch-amortization model from
+`repro.core.models` into the window decision.  All three are pure host-side
+policy — no JAX — so they unit-test in microseconds and the serving loop
+stays a thin shell around them.
 """
 
 from __future__ import annotations
 
 import collections
 import dataclasses
+import math
 import threading
 from typing import Callable, Hashable, Iterable, Mapping, Sequence
 
@@ -127,3 +137,144 @@ def topological_order(graph: TileGraph) -> list[Hashable]:
         order.append(k)
         sched.complete(k)
     return order
+
+
+# ---------------------------------------------------------------------------
+# Serving queue policy (consumed by repro.launch.serve)
+# ---------------------------------------------------------------------------
+
+LANES = ("interactive", "batch")        # service order: interactive first
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionPolicy:
+    """Backpressure knobs of the serving queue.
+
+    `max_depth` bounds each lane's admitted-but-unserved depth; an offer
+    past ``reject_watermark * max_depth`` is rejected with a retry-after
+    hint so clients back off instead of queueing unboundedly (the SLA
+    protection: bounded queues bound worst-case latency).
+    """
+
+    max_depth: int = 256
+    reject_watermark: float = 1.0
+    retry_after_s: float = 0.05
+
+    def __post_init__(self):
+        if self.max_depth < 1:
+            raise ValueError(f"max_depth must be >= 1, got {self.max_depth}")
+        if not 0.0 < self.reject_watermark <= 1.0:
+            raise ValueError("reject_watermark must be in (0, 1], got "
+                             f"{self.reject_watermark}")
+
+
+class LaneQueue:
+    """Two-level priority queue with bounded depth and backpressure.
+
+    Items are admitted into one of two lanes — ``"interactive"`` (latency
+    lane, always drained first) or ``"batch"`` (throughput lane) — FIFO
+    within a lane.  `offer` applies the admission policy and returns None
+    on admit or a retry-after hint (seconds) on rejection; the hint scales
+    with how full the lane is, so a saturated lane tells clients to back
+    off longer.
+    """
+
+    def __init__(self, policy: AdmissionPolicy | None = None):
+        self.policy = policy or AdmissionPolicy()
+        self._lanes: dict[str, collections.deque] = {
+            lane: collections.deque() for lane in LANES}
+
+    def offer(self, item, lane: str = "batch") -> float | None:
+        """Admit `item` into `lane`; None on admit, retry-after (s) if full."""
+        if lane not in self._lanes:
+            raise ValueError(f"unknown lane {lane!r}; lanes: {LANES}")
+        q = self._lanes[lane]
+        limit = self.policy.reject_watermark * self.policy.max_depth
+        if len(q) >= limit:
+            overfull = len(q) / max(limit, 1.0)
+            return self.policy.retry_after_s * overfull
+        q.append(item)
+        return None
+
+    def depth(self, lane: str | None = None) -> int:
+        """Admitted-but-unserved items in `lane` (or across both lanes)."""
+        if lane is not None:
+            return len(self._lanes[lane])
+        return sum(len(q) for q in self._lanes.values())
+
+    def __len__(self) -> int:
+        return self.depth()
+
+    def head(self):
+        """``(item, lane)`` next to serve — interactive lane first — or None."""
+        for lane in LANES:
+            if self._lanes[lane]:
+                return self._lanes[lane][0], lane
+        return None
+
+    def items(self):
+        """All admitted items in service order (interactive lane first)."""
+        for lane in LANES:
+            yield from self._lanes[lane]
+
+    def remove(self, items) -> None:
+        """Drop `items` (a served batch) from whichever lanes hold them."""
+        drop = {id(x) for x in items}
+        for lane in LANES:
+            self._lanes[lane] = collections.deque(
+                x for x in self._lanes[lane] if id(x) not in drop)
+
+
+def window_close_s(now_s: float, window_s: float,
+                   deadline_s: float = math.inf,
+                   predicted_launch_s: float = 0.0,
+                   margin_s: float = 0.0) -> float:
+    """Absolute close time of a batching window, deadline-aware.
+
+    The window collects same-bucket arrivals for at most `window_s` past
+    `now_s`, but closes EARLY when the head request's `deadline_s` (absolute,
+    same clock as `now_s`) leaves no slack: the batch must launch by
+    ``deadline - predicted_launch - margin`` for the head to still make its
+    deadline.  Never returns a time before `now_s` (an already-doomed head
+    launches immediately rather than waiting the full window).
+    """
+    close = now_s + window_s
+    if math.isfinite(deadline_s):
+        close = min(close, deadline_s - predicted_launch_s - margin_s)
+    return max(now_s, close)
+
+
+class ServiceEstimator:
+    """Per-bucket EWMA of measured per-item launch time.
+
+    Every completed batch launch feeds `observe`; `predict` turns the
+    current estimate into a predicted wall time for a B-item launch via the
+    batch-amortization model (`repro.core.models.batch_amortized_time`).
+    With no observation yet it predicts 0.0 — the window then closes on the
+    deadline itself, which is the conservative direction (never waits past
+    what the deadline allows).
+    """
+
+    def __init__(self, alpha: float = 0.4):
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+        self.alpha = alpha
+        self._t_item: dict = {}
+
+    def observe(self, key, batch: int, launch_s: float) -> None:
+        """Record one measured launch of `batch` items under bucket `key`."""
+        from repro.core import models
+
+        t_item = max(launch_s - models.T_DISPATCH_S, 0.0) / max(batch, 1)
+        old = self._t_item.get(key)
+        self._t_item[key] = (t_item if old is None
+                             else self.alpha * t_item + (1 - self.alpha) * old)
+
+    def predict(self, key, batch: int) -> float:
+        """Predicted wall time (s) of a `batch`-item launch for bucket `key`."""
+        from repro.core import models
+
+        t_item = self._t_item.get(key)
+        if t_item is None:
+            return 0.0
+        return models.batch_amortized_time(t_item, max(batch, 1))

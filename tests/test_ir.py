@@ -280,4 +280,4 @@ def test_serve_stencil_accepts_custom_op(capsys):
     op = ir.register(_wave_r2_op())
     serve.serve_stencil(op.name, (8, 12, 10), n_steps=2, n_requests=2)
     out = capsys.readouterr().out
-    assert "serving wave13-r2" in out and "served 2 requests" in out
+    assert "serving wave13-r2" in out and "served 2/2 requests" in out

@@ -1,0 +1,459 @@
+"""Multi-tenant serving tier: padding classes, queue policy, telemetry, gate.
+
+Covers the PR end-to-end below the soak benchmark: the padding ladder and
+masked operator variants (`repro.core.padding`) with bitwise-equality of the
+padded frozen-halo run to the sequential `ops.mwd` run, the ragged
+continuous-batching path through `serve_queue` (mixed grid sizes sharing one
+fused launch per padding class), the two-lane admission/backpressure and
+deadline-window policy (`repro.core.scheduler`), the pluggable telemetry
+sinks + in-process aggregator (`repro.launch.telemetry`), and the CI soak
+gate (`benchmarks.soak_report.verdict`).
+"""
+
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import ir, padding, scheduler
+from repro.core import stencils as st
+from repro.core.mwd import MWDPlan
+from repro.kernels import ops
+from repro.launch import serve
+from repro.launch import telemetry as tlm
+
+SPEC7C = st.SPECS["7pt-const"]
+SPEC7V = st.SPECS["7pt-var"]
+PLAN = MWDPlan(d_w=4, n_f=2)
+
+
+# ---------------------------------------------------------------------------
+# Padding ladder: classes of the ragged-batching bucketer
+# ---------------------------------------------------------------------------
+
+def test_ladder_modes():
+    assert padding.EXACT.padded_shape((6, 10, 8)) == (6, 10, 8)
+    assert padding.POW2.padded_shape((6, 10, 8)) == (8, 16, 8)
+    lad = padding.PaddingLadder("rungs", (16, 8))        # sorts to (8, 16)
+    assert lad.rungs == (8, 16)
+    assert lad.padded_shape((6, 10, 8)) == (8, 16, 8)
+    # an extent beyond the last rung keeps its exact size (own class)
+    assert lad.padded_extent(20) == 20
+
+
+def test_ladder_validation():
+    with pytest.raises(ValueError, match="mode"):
+        padding.PaddingLadder("fibonacci")
+    with pytest.raises(ValueError, match="rung"):
+        padding.PaddingLadder("rungs", ())
+    with pytest.raises(ValueError, match=">= 1"):
+        padding.PaddingLadder("rungs", (0, 8))
+    with pytest.raises(ValueError, match=">= 1"):
+        padding.POW2.padded_extent(0)
+
+
+def test_parse_ladder_forms():
+    assert padding.parse_ladder(None) is padding.EXACT
+    assert padding.parse_ladder("exact") is padding.EXACT
+    assert padding.parse_ladder("pow2") is padding.POW2
+    lad = padding.parse_ladder("8,16,32")
+    assert lad.mode == "rungs" and lad.rungs == (8, 16, 32)
+    assert padding.parse_ladder(lad) is lad
+
+
+def test_bucket_key_ladder_merges_shapes():
+    """Same pow2 class -> same bucket; exact ladder keeps shapes separate."""
+    a = st.make_problem(SPEC7V, (6, 10, 8), seed=0)
+    b = st.make_problem(SPEC7V, (6, 12, 8), seed=1)
+    ka = serve.bucket_key(SPEC7V, a[0], a[1], 2, ladder="pow2")
+    kb = serve.bucket_key(SPEC7V, b[0], b[1], 2, ladder="pow2")
+    assert ka == kb and ka[1] == (8, 16, 8)
+    assert (serve.bucket_key(SPEC7V, a[0], a[1], 2)
+            != serve.bucket_key(SPEC7V, b[0], b[1], 2))
+
+
+# ---------------------------------------------------------------------------
+# Masked operator variants (frozen-halo padding)
+# ---------------------------------------------------------------------------
+
+def test_masked_variant_pure_data_ops_unchanged():
+    """All-array 1st-order taps and array-scale 2nd-order ops mask by data
+    alone: the padded launch runs the SAME op (shared kernels, plans, jits)."""
+    assert padding.masked_variant(SPEC7V) is SPEC7V
+    assert padding.masked_variant(st.SPECS["25pt-var"]) is st.SPECS["25pt-var"]
+    assert padding.masked_variant(st.SPECS["25pt-const"]) is st.SPECS["25pt-const"]
+
+
+def test_masked_variant_promotes_scalar_op():
+    """7pt-const inlines scalars, so its masked twin promotes every tap to a
+    per-cell stream (maskable data) and keeps no scalar slots."""
+    mop = padding.masked_variant(SPEC7C)
+    assert mop.name == "7pt-const+mask"
+    assert all(t.coeff.kind == "array" for t in mop.taps)
+    assert mop.n_scalars == 0
+    assert padding.masked_variant(SPEC7C) is mop        # recipe is cached
+
+
+def test_masked_variant_rejects_center_sharing_group():
+    """A center tap sharing its coefficient group with neighbors cannot be
+    frozen to identity without breaking bitwise association order."""
+    taps = (ir.Tap(0, 0, 0, ir.const(0)), ir.Tap(0, 0, 1, ir.const(0)))
+    op = ir.StencilOp("shared-center", taps, default_scalars=(0.5,))
+    with pytest.raises(ValueError, match="exact padding ladder"):
+        padding.masked_variant(op)
+
+
+def test_pad_problem_requires_dominating_shape():
+    state, coeffs = st.make_problem(SPEC7V, (6, 10, 8), seed=0)
+    with pytest.raises(ValueError, match="dominate"):
+        padding.pad_problem(SPEC7V, state, coeffs, (6, 8, 8))
+
+
+@pytest.mark.parametrize("name", list(st.SPECS))
+def test_padded_run_bitwise_equals_unpadded(name):
+    """The paper ops, padded with frozen-halo masking and cropped back, are
+    bitwise-equal to their unpadded sequential run under the same plan."""
+    spec = st.SPECS[name]
+    r = spec.radius
+    shape = (6, 10, 8) if r == 1 else (10, 18, 14)
+    padded = (8, 12, 10) if r == 1 else (12, 20, 16)
+    plan = MWDPlan(d_w=4 * r, n_f=2)
+    state, coeffs = st.make_problem(spec, shape, seed=3)
+    want = ops.mwd(spec, state, coeffs, 2, plan=plan)
+    mop, state_p, coeffs_p = padding.pad_problem(spec, state, coeffs, padded)
+    got = padding.crop_state(ops.mwd(mop, state_p, coeffs_p, 2, plan=plan),
+                             shape)
+    np.testing.assert_array_equal(np.asarray(want[0]), np.asarray(got[0]))
+    np.testing.assert_array_equal(np.asarray(want[1]), np.asarray(got[1]))
+
+
+def test_padding_waste():
+    assert padding.padding_waste([(4, 4, 4)], (4, 4, 4)) == 0.0
+    assert padding.padding_waste([(4, 4, 4)], (4, 4, 8)) == pytest.approx(1.0)
+    assert padding.padding_waste([], (4, 4, 4)) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Ragged continuous batching through the serving loop
+# ---------------------------------------------------------------------------
+
+def test_serve_queue_pads_mixed_shapes_into_one_launch():
+    """Two grid sizes in one pow2 class ride ONE fused launch, each response
+    bitwise-equal to its sequential plan-matched run."""
+    shapes = [(6, 10, 8), (6, 12, 8), (6, 10, 8), (6, 12, 8)]
+    reqs = []
+    for i, shape in enumerate(shapes):
+        state, coeffs = st.make_problem(SPEC7V, shape, seed=20 + i)
+        reqs.append(serve.StencilRequest(rid=i, spec=SPEC7V, state=state,
+                                         coeffs=coeffs, n_steps=2))
+    results, records = serve.serve_queue(reqs, max_batch=4,
+                                         batch_window_ms=1.0, plan=PLAN,
+                                         ladder="pow2")
+    assert [rec["size"] for rec in records] == [4]
+    assert records[0]["padded_shape"] == (8, 16, 8)
+    assert records[0]["waste"] > 0.0
+    assert records[0]["plan"] == PLAN
+    for r in reqs:
+        want = ops.mwd(SPEC7V, r.state, r.coeffs, 2, plan=records[0]["plan"])
+        got = results[r.rid]
+        assert got[0].shape == r.state[0].shape     # cropped back
+        np.testing.assert_array_equal(np.asarray(want[0]), np.asarray(got[0]))
+        np.testing.assert_array_equal(np.asarray(want[1]), np.asarray(got[1]))
+
+
+def test_serve_queue_masked_twin_op_bitwise():
+    """Scalar-coefficient op (masked +mask twin) through the ragged path."""
+    shapes = [(6, 10, 8), (6, 12, 8)]
+    reqs = []
+    for i, shape in enumerate(shapes):
+        state, coeffs = st.make_problem(SPEC7C, shape, seed=30 + i)
+        reqs.append(serve.StencilRequest(rid=i, spec=SPEC7C, state=state,
+                                         coeffs=coeffs, n_steps=2))
+    results, records = serve.serve_queue(reqs, max_batch=2,
+                                         batch_window_ms=1.0, plan=PLAN,
+                                         ladder="pow2")
+    assert [rec["size"] for rec in records] == [2]
+    for r in reqs:
+        want = ops.mwd(SPEC7C, r.state, r.coeffs, 2, plan=PLAN)
+        np.testing.assert_array_equal(np.asarray(want[0]),
+                                      np.asarray(results[r.rid][0]))
+
+
+def test_ragged_batch_rejects_mixed_scalars():
+    """Scalars are inlined compile-time constants: a ragged batch that mixes
+    them must refuse rather than run every member with item 0's physics."""
+    s1, c1 = st.make_problem(SPEC7C, (6, 10, 8), seed=0)
+    s2, _ = st.make_problem(SPEC7C, (6, 12, 8), seed=1)
+    with pytest.raises(ValueError, match="scalar"):
+        serve._launch_batch(SPEC7C, [s1, s2], [c1, (0.9, 0.2)], 2, PLAN,
+                            (8, 16, 8))
+
+
+def test_serve_stencil_mixed_grids_report(tmp_path, monkeypatch):
+    """End-to-end mixed-size traffic: one padding class, fused batches,
+    bitwise results, waste + lane/deadline counters in the report."""
+    from repro.core import registry as reg
+
+    monkeypatch.setenv(reg.ENV_VAR, str(tmp_path / "plans.json"))
+    grids = [(6, 10, 8), (6, 12, 8)]
+    report = serve.serve_stencil(
+        "7pt-var", grids, n_steps=2, n_requests=4, max_batch=4,
+        batch_window_ms=2.0, arrival_ms=0.1, pad="pow2", plan=PLAN,
+        interactive_every=2, deadline_ms=5000.0)
+    assert report["classes"] == {str((8, 16, 8)): 4}
+    assert report["served"] == 4 and report["rejected"] == 0
+    assert report["padding_waste"] > 0.0
+    assert report["deadline_misses"] == 0
+    for i in range(4):
+        state, coeffs = st.make_problem(SPEC7V, grids[i % 2], seed=i)
+        want = ops.mwd(SPEC7V, state, coeffs, 2, plan=PLAN)
+        np.testing.assert_array_equal(np.asarray(want[0]),
+                                      np.asarray(report["results"][i][0]))
+
+
+# ---------------------------------------------------------------------------
+# Queue policy: lanes, admission control, deadline-aware window
+# ---------------------------------------------------------------------------
+
+def test_admission_policy_validation():
+    with pytest.raises(ValueError, match="max_depth"):
+        scheduler.AdmissionPolicy(max_depth=0)
+    with pytest.raises(ValueError, match="watermark"):
+        scheduler.AdmissionPolicy(reject_watermark=0.0)
+    with pytest.raises(ValueError, match="watermark"):
+        scheduler.AdmissionPolicy(reject_watermark=1.5)
+
+
+def test_lane_queue_priority_and_backpressure():
+    q = scheduler.LaneQueue(scheduler.AdmissionPolicy(max_depth=2))
+    assert q.offer("b1", "batch") is None
+    assert q.offer("i1", "interactive") is None
+    assert q.head() == ("i1", "interactive")            # interactive first
+    assert list(q.items()) == ["i1", "b1"]
+    assert q.offer("b2", "batch") is None
+    retry = q.offer("b3", "batch")                      # lane full
+    assert retry is not None and retry > 0.0
+    assert q.depth("batch") == 2 and len(q) == 3
+    q.remove(["i1", "b1"])
+    assert q.head() == ("b2", "batch") and len(q) == 1
+    with pytest.raises(ValueError, match="lane"):
+        q.offer("x", "bulk")
+
+
+def test_window_close_deadline_aware():
+    assert scheduler.window_close_s(1.0, 0.005) == pytest.approx(1.005)
+    # a near deadline closes the window early by the predicted launch time
+    assert scheduler.window_close_s(
+        1.0, 0.1, deadline_s=1.02, predicted_launch_s=0.01) == pytest.approx(1.01)
+    # an already-doomed head launches now rather than waiting the window out
+    assert scheduler.window_close_s(1.0, 0.1, deadline_s=0.5) == 1.0
+
+
+def test_service_estimator_feeds_amortization_model():
+    from repro.core import models
+
+    est = scheduler.ServiceEstimator()
+    assert est.predict("k", 4) == 0.0                   # conservative default
+    est.observe("k", batch=2, launch_s=2e-3)
+    t_item = max(2e-3 - models.T_DISPATCH_S, 0.0) / 2
+    assert est.predict("k", 4) == pytest.approx(
+        models.batch_amortized_time(t_item, 4))
+    assert est.predict("k", 8) > est.predict("k", 1)
+    with pytest.raises(ValueError, match="alpha"):
+        scheduler.ServiceEstimator(alpha=0.0)
+
+
+def test_serve_queue_rejects_over_watermark():
+    """Offers past the bounded depth come back as Rejected + retry hint."""
+    reqs = []
+    for i in range(5):
+        state, coeffs = st.make_problem(SPEC7C, (6, 10, 8), seed=i)
+        reqs.append(serve.StencilRequest(rid=i, spec=SPEC7C, state=state,
+                                         coeffs=coeffs, n_steps=1))
+    results, records = serve.serve_queue(
+        reqs, max_batch=8, batch_window_ms=1.0, plan=PLAN,
+        admission=scheduler.AdmissionPolicy(max_depth=2))
+    rejected = [v for v in results.values() if isinstance(v, serve.Rejected)]
+    assert len(rejected) == 3
+    assert all(r.retry_after_s > 0.0 for r in rejected)
+    assert sum(rec["size"] for rec in records) == 2     # the admitted two
+
+
+def test_serve_queue_interactive_lane_served_first():
+    """With both lanes waiting, the interactive head launches first even
+    though the batch-lane request arrived no later."""
+    sb, cb = st.make_problem(SPEC7C, (6, 10, 8), seed=0)
+    si, _ = st.make_problem(SPEC7C, (6, 10, 8), seed=1)
+    reqs = [serve.StencilRequest(rid=0, spec=SPEC7C, state=sb, coeffs=cb,
+                                 n_steps=1, priority="batch"),
+            serve.StencilRequest(rid=1, spec=SPEC7C, state=si,
+                                 coeffs=(0.9, 0.2), n_steps=1,
+                                 priority="interactive")]
+    _, records = serve.serve_queue(reqs, max_batch=4, batch_window_ms=1.0,
+                                   plan=PLAN)
+    assert records[0]["lane"] == "interactive" and records[0]["rids"] == [1]
+    assert records[1]["rids"] == [0]
+
+
+def test_serve_queue_deadline_closes_window_early():
+    """A doomed head launches alone instead of waiting the window for a
+    same-class arrival; without the deadline the window batches both."""
+    s0, c0 = st.make_problem(SPEC7C, (6, 10, 8), seed=0)
+    s1, c1 = st.make_problem(SPEC7C, (6, 10, 8), seed=1)
+
+    def reqs(deadline):
+        return [serve.StencilRequest(rid=0, spec=SPEC7C, state=s0, coeffs=c0,
+                                     n_steps=1, deadline_s=deadline),
+                serve.StencilRequest(rid=1, spec=SPEC7C, state=s1, coeffs=c1,
+                                     n_steps=1, arrival_s=0.05)]
+
+    _, late = serve.serve_queue(reqs(math.inf), max_batch=2,
+                                batch_window_ms=200.0, plan=PLAN)
+    assert [rec["size"] for rec in late] == [2]
+    _, early = serve.serve_queue(reqs(0.0), max_batch=2,
+                                 batch_window_ms=200.0, plan=PLAN)
+    assert [rec["size"] for rec in early] == [1, 1]
+
+
+# ---------------------------------------------------------------------------
+# Telemetry: sinks, rolling percentiles, aggregator
+# ---------------------------------------------------------------------------
+
+def test_make_telemetry_forms(tmp_path):
+    assert type(tlm.make_telemetry(None)) is tlm.Telemetry
+    assert type(tlm.make_telemetry("")) is tlm.Telemetry
+    assert isinstance(tlm.make_telemetry("stdout"), tlm.StdoutTelemetry)
+    sink = tlm.StdoutTelemetry()
+    assert tlm.make_telemetry(sink) is sink             # instances pass through
+    j = tlm.make_telemetry(f"jsonl:{tmp_path / 'ev.jsonl'}")
+    assert isinstance(j, tlm.JsonlTelemetry)
+    j.close()
+    with pytest.raises(ValueError, match="telemetry"):
+        tlm.make_telemetry("csv:/tmp/x")
+
+
+def test_jsonl_telemetry_round_trips(tmp_path):
+    path = str(tmp_path / "ev.jsonl")
+    sink = tlm.JsonlTelemetry(path)
+    sink.emit("launch", key=(1, (2, 3)), size=2, plan=MWDPlan(d_w=4, n_f=2))
+    sink.close()
+    [rec] = [json.loads(line) for line in open(path)]
+    assert rec["event"] == "launch" and rec["size"] == 2
+    assert rec["key"] == [1, [2, 3]]                    # tuples -> lists
+    assert "t_s" in rec
+
+
+def test_rolling_percentiles_window():
+    r = tlm.Rolling(maxlen=100)
+    assert r.percentile(99) == 0.0 and r.summary()["n"] == 0
+    for v in range(1, 101):
+        r.add(v)
+    assert r.percentile(0) == 1.0 and r.percentile(100) == 100.0
+    assert r.percentile(50) == pytest.approx(51.0)      # nearest-rank
+    small = tlm.Rolling(maxlen=4)
+    for v in range(10):
+        small.add(v)
+    assert small.percentile(0) == 6.0                   # oldest dropped
+    s = r.summary()
+    assert s["p50"] <= s["p95"] <= s["p99"] and s["mean"] == pytest.approx(50.5)
+
+
+def test_aggregator_rollup():
+    agg = tlm.Aggregator()
+    agg.on_launch("k1", size=2, launch_s=0.01, padded_cells=200,
+                  real_cells=100, plan_source="registry:measured")
+    agg.on_launch("k2", size=1, launch_s=0.02, padded_cells=100,
+                  real_cells=100, plan_source="model")
+    agg.on_reject()
+    agg.on_done(0.010, deadline_missed=False)
+    agg.on_done(0.030, deadline_missed=True)
+    assert agg.plan_cache_hit_rate == pytest.approx(0.5)
+    snap = agg.snapshot()
+    assert snap["served"] == 3 and snap["batches"] == 2
+    assert snap["rejected"] == 1 and snap["deadline_misses"] == 1
+    assert snap["padding_waste"] == pytest.approx(0.5)
+    assert snap["p50_ms"] <= snap["p99_ms"] <= 30.0 + 1e-6
+    assert set(snap["buckets"]) == {"k1", "k2"}
+
+
+def test_serve_queue_emits_jsonl_events(tmp_path):
+    path = str(tmp_path / "serve.jsonl")
+    reqs = []
+    for i in range(2):
+        state, coeffs = st.make_problem(SPEC7C, (6, 10, 8), seed=i)
+        reqs.append(serve.StencilRequest(rid=i, spec=SPEC7C, state=state,
+                                         coeffs=coeffs, n_steps=1))
+    serve.serve_queue(reqs, max_batch=2, batch_window_ms=1.0, plan=PLAN,
+                      telemetry=f"jsonl:{path}")
+    events = [json.loads(line) for line in open(path)]
+    kinds = [e["event"] for e in events]
+    assert kinds.count("admit") == 2 and "launch" in kinds
+    assert kinds[-1] == "summary"
+    summary = events[-1]
+    assert summary["served"] == 2 and summary["rejected"] == 0
+    launch = next(e for e in events if e["event"] == "launch")
+    assert launch["size"] == 2 and "p99_ms" in launch
+
+
+# ---------------------------------------------------------------------------
+# The CI soak gate (benchmarks.soak_report)
+# ---------------------------------------------------------------------------
+
+GOOD_REPORT = {"p99_ms": 12.0, "dropped": 0, "bitwise_ok": True,
+               "throughput_ratio": 1.8}
+
+
+def test_soak_verdict_passes_good_report():
+    from benchmarks import soak_report
+
+    assert soak_report.verdict(GOOD_REPORT, max_p99_ms=100.0,
+                               min_throughput_ratio=1.0) == []
+
+
+@pytest.mark.parametrize("patch,needle", [
+    ({"p99_ms": 500.0}, "p99"),
+    ({"p99_ms": None}, "no p99_ms"),
+    ({"dropped": 3}, "dropped"),
+    ({"bitwise_ok": False}, "bitwise"),
+    ({"throughput_ratio": 0.4}, "throughput"),
+])
+def test_soak_verdict_flags_each_breach(patch, needle):
+    from benchmarks import soak_report
+
+    report = dict(GOOD_REPORT)
+    report.update({k: v for k, v in patch.items() if v is not None})
+    for k, v in patch.items():
+        if v is None:
+            del report[k]
+    fails = soak_report.verdict(report, max_p99_ms=100.0, max_dropped=0,
+                                min_throughput_ratio=1.0)
+    assert len(fails) == 1 and needle in fails[0]
+
+
+def test_soak_report_cli_gate(tmp_path, capsys):
+    from benchmarks import soak_report
+
+    path = str(tmp_path / "soak.json")
+    json.dump(GOOD_REPORT, open(path, "w"))
+    assert soak_report.main([path, "--max-p99-ms", "100"]) == 0
+    assert "SOAK GATE: PASS" in capsys.readouterr().out
+    assert soak_report.main([path, "--max-p99-ms", "5"]) == 1
+    out = capsys.readouterr().out
+    assert "SOAK GATE: FAIL" in out and "exceeds" in out
+
+
+# ---------------------------------------------------------------------------
+# prefill_into_cache guard (regression: undersized explicit cache_len)
+# ---------------------------------------------------------------------------
+
+def test_prefill_guard_covers_gen_zero():
+    """gen=0 still decodes one slot past the prompt: cache_len == s must be
+    rejected before any compute (the guard is max(gen, 1)-aware)."""
+    from repro import configs
+
+    cfg = configs.reduced(configs.get("llama3.2-1b"), n_layers=1, d_model=64)
+    import jax.numpy as jnp
+    toks = jnp.zeros((1, 3), jnp.int32)
+    with pytest.raises(ValueError, match="cannot hold"):
+        serve.prefill_into_cache(cfg, None, toks, gen=0, cache_len=3)
