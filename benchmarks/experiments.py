@@ -158,6 +158,38 @@ def residual_table(report: dict) -> str:
     return "\n".join(rows)
 
 
+def dtype_table(pts: list[dict]) -> str:
+    """Reduced-precision vs f32 comparison rows (same grid, fused, B=1).
+
+    Pairs every non-f32 sweep point with the f32 point on the same
+    (stencil, grid); the `vs f32` column is the exact-traffic B/LUP ratio —
+    the word-size saving the CI precision gate enforces (bf16 <= 0.6x f32).
+    """
+    by: dict[tuple, dict] = {}
+    for p in pts:
+        if p["batch"] != 1 or p.get("distributed") or p["mode"] != "fused":
+            continue
+        by[(p["stencil"], tuple(p["grid"]), p.get("dtype", "f32"))] = p
+    rows = ["| stencil | grid | dtype | plan | exact B/LUP | vs f32 "
+            "| measured GLUP/s |",
+            "|---|---|---|---|---|---|---|"]
+    for (stencil, grid, dt), p in sorted(by.items()):
+        if dt == "f32":
+            continue
+        base = by.get((stencil, grid, "f32"))
+        for q in (base, p):
+            if q is None:
+                continue
+            bk = q["traffic"]["b_per_lup"]
+            ratio = ("-" if base is None or q is base
+                     else f"{bk / base['traffic']['b_per_lup']:.2f}x")
+            rows.append(
+                f"| {stencil} | {_grid_str(q)} | {q.get('dtype', 'f32')} "
+                f"| {_plan_str(q)} | {bk:.2f} | {ratio} "
+                f"| {q['measured']['glups']:.5f} |")
+    return "\n".join(rows)
+
+
 def distributed_table(pts: list[dict]) -> str:
     """Deep-halo super-stepper leg rows (present when the sweep ran it)."""
     rows = ["| stencil | grid | devices | t_block | plan | measured GLUP/s "
@@ -300,7 +332,10 @@ def render(results_dir: str = DEFAULT_RESULTS_DIR) -> str:
                "`python -m benchmarks.experiments`")
     out.append("")
 
-    by_st = _by_stencil(launch_pts)
+    # sections 1-3 are the f32 study; reduced-precision points get their own
+    # paired comparison table (2b) instead of unmarked duplicate rows here
+    by_st = _by_stencil([p for p in launch_pts
+                         if p.get("dtype", "f32") == "f32"])
     out.append("## 1. Throughput vs grid size (Figs. 8-15 analog)")
     out.append("")
     out.append("Measured wall-clock GLUP/s of the real MWD launch per grid "
@@ -336,6 +371,24 @@ def render(results_dir: str = DEFAULT_RESULTS_DIR) -> str:
         out.append("")
         out.append(blup_table(sp))
     out.append("")
+
+    rp_pts = [p for p in launch_pts if p.get("dtype", "f32") != "f32"]
+    if rp_pts:
+        out.append("## 2b. Reduced-precision streams (bf16 vs f32)")
+        out.append("")
+        out.append("Sub-32-bit data streams with float32 in-tile "
+                   "accumulation (`ops.mwd(dtype=...)`): the word size")
+        out.append("halves every stream Eq. 5 counts, so the exact kernel "
+                   "B/LUP drops to 0.5x at an identical")
+        out.append("plan. Accuracy stays inside each operator's declared "
+                   "per-dtype error budget")
+        out.append("(`StencilOp.tolerance`, enforced against the f64 oracle "
+                   "by `tests/test_precision.py`);")
+        out.append("the traffic ratio below is gated in CI by "
+                   "`benchmarks/precision_gate.py`.")
+        out.append("")
+        out.append(dtype_table(launch_pts))
+        out.append("")
 
     out.append("## 3. Energy vs tuning choice (Fig. 19 analog)")
     out.append("")

@@ -147,7 +147,7 @@ def time_mwd_launch(spec: StencilSpec, states, coeffs, n_steps: int,
 def measure_score(spec: StencilSpec, grid_shape, word_bytes: int = 4,
                   chip: hw.ChipSpec = hw.V5E, *, n_steps: int = 4,
                   reps: int = 3, warmup: int = 1, seed: int = 0,
-                  batch: int = 1) -> Callable[[MWDPlan], float]:
+                  batch: int = 1, dtype=None) -> Callable[[MWDPlan], float]:
     """Measured scorer: wall-clock GLUP/s of the real `ops.mwd` launch.
 
     This is the paper's Fig. 7 measurement step: the candidate plan is
@@ -157,9 +157,11 @@ def measure_score(spec: StencilSpec, grid_shape, word_bytes: int = 4,
     geometry, VMEM overflow per Eq. 3) are pruned by the model *without*
     measuring — the model-pruned search that makes measurement affordable.
 
-    The state is float32 (the container's measurement dtype); `word_bytes`
-    only parameterizes the analytic VMEM prune. `tg_x > 1` plans are timed
-    on this device's share of the grid, `nx // tg_x`.
+    `dtype` sets the stream dtype of the measured problems (default f32,
+    the container's measurement dtype) — pass it together with the matching
+    `word_bytes` so the analytic VMEM prune sees the same word the launch
+    streams. `tg_x > 1` plans are timed on this device's share of the grid,
+    `nx // tg_x`.
 
     `batch` > 1 times the batched serving launch instead: ONE
     `ops.mwd_batched` call advancing `batch` independent problems, so the
@@ -184,7 +186,8 @@ def measure_score(spec: StencilSpec, grid_shape, word_bytes: int = 4,
         if not models.vmem_fits(spec, plan.d_w, plan.n_f, n_xb, chip):
             return -math.inf
         if nx_l not in problems:
-            probs = [st.make_problem(spec, (nz, ny, nx_l), seed=seed + i)
+            probs = [st.make_problem(spec, (nz, ny, nx_l), dtype=dtype,
+                                     seed=seed + i)
                      for i in range(batch)]
             problems[nx_l] = ([p[0] for p in probs], [p[1] for p in probs])
         states, coeffs = problems[nx_l]

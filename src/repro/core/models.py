@@ -20,6 +20,7 @@ import dataclasses
 import math
 
 from repro import hw
+from repro.core.precision import DEFAULT_WORD_BYTES
 from repro.core.stencils import StencilSpec
 from repro.core.tiling import wavefront_width
 
@@ -59,7 +60,8 @@ def vmem_fits(spec: StencilSpec, d_w: int, n_f: int, n_xb: int,
 # Eq. 4/5: code balance (bytes / LUP) of the wavefront-diamond pass
 # ---------------------------------------------------------------------------
 
-def code_balance(spec: StencilSpec, d_w: int, word_bytes: int = 8) -> float:
+def code_balance(spec: StencilSpec, d_w: int,
+                 word_bytes: int = DEFAULT_WORD_BYTES) -> float:
     """Eq. 5: B_C = word*R*[(2*D_w - 2R) + (N_D*D_w + 2R)] / D_w**2  bytes/LUP.
 
     (The paper's 16 = 2*word at double precision: the extruded diamond volume
@@ -72,7 +74,8 @@ def code_balance(spec: StencilSpec, d_w: int, word_bytes: int = 8) -> float:
     return word_bytes * words / lups
 
 
-def spatial_code_balance(spec: StencilSpec, word_bytes: int = 8) -> float:
+def spatial_code_balance(spec: StencilSpec,
+                         word_bytes: int = DEFAULT_WORD_BYTES) -> float:
     """Optimal spatial-blocking code balance, bytes/LUP (the MWD baseline)."""
     return spec.spatial_code_balance(word_bytes)
 
@@ -112,7 +115,7 @@ def batch_amortization(t_item_s: float, batch: int,
 
 
 def mwd_tile_bytes(spec: StencilSpec, d_w: int, n_f: int, nz: int, nx: int,
-                   word_bytes: int = 4) -> float:
+                   word_bytes: int = DEFAULT_WORD_BYTES) -> float:
     """Exact DMA bytes ONE tile moves over its full wavefront sweep.
 
     Window streams in (both parity buffers + coefficient streams, one
@@ -134,7 +137,8 @@ def mwd_tile_bytes(spec: StencilSpec, d_w: int, n_f: int, nz: int, nx: int,
 
 
 def mwd_row_overhead_bytes(spec: StencilSpec, d_w: int, n_f: int,
-                           grid_shape, word_bytes: int = 4) -> float:
+                           grid_shape,
+                           word_bytes: int = DEFAULT_WORD_BYTES) -> float:
     """Extra HBM bytes ONE per-row launch moves vs the fused schedule.
 
     The per-row kernel streams and re-emits every tile of the row, including
@@ -150,7 +154,8 @@ def mwd_row_overhead_bytes(spec: StencilSpec, d_w: int, n_f: int,
 
 
 def ghostzone_code_balance(spec: StencilSpec, t_b: int, block_y: int,
-                           block_z: int, word_bytes: int = 8) -> float:
+                           block_z: int,
+                           word_bytes: int = DEFAULT_WORD_BYTES) -> float:
     """Code balance of the ghost-zone (overlapped) fused kernel.
 
     Each T_b-step block reads (block + 2*R*T_b halo)*N_D streams and writes the
@@ -202,7 +207,8 @@ class EcmPrediction:
 
 
 def ecm_predict(spec: StencilSpec, code_balance_bytes: float, lups: float,
-                chip: hw.ChipSpec = hw.V5E, word_bytes: int = 4,
+                chip: hw.ChipSpec = hw.V5E,
+                word_bytes: int = DEFAULT_WORD_BYTES,
                 redundancy: float = 1.0) -> EcmPrediction:
     """ECM-TPU prediction for `lups` updates at the given code balance.
 

@@ -1,0 +1,120 @@
+"""Dtype as a first-class plan dimension: parsing, word sizes, accumulation.
+
+The paper's code-balance model (Eq. 4/5) scales linearly with the word size
+— the one lever everything else in the repo leaves untouched (all streams
+float32, ``w4`` baked into every registry key). This module is the single
+source of truth for that axis:
+
+* the dtype short-name registry every CLI flag parses through
+  (``--dtype bf16`` etc.) and every results/docs column prints through,
+* ``word_bytes(dtype)``: the stream word size all traffic/model call sites
+  derive from the *actual* problem dtype instead of a hard-coded constant,
+* ``DEFAULT_WORD_BYTES``: the one shared default for `repro.core.models`
+  and `repro.core.traffic` (historically models defaulted to 8 — the
+  paper's double precision — while traffic defaulted to 4, so a model/
+  traffic pair called with defaults silently disagreed on the word size;
+  tests/test_precision.py pins the agreement),
+* accumulator-dtype resolution for the mixed-precision kernels: bf16/fp16
+  data *streams* with float32 in-tile accumulation (`resolve_acc`).
+
+Kept numpy-only (via ml_dtypes, which jax depends on) so `models`/`traffic`
+stay importable without jax.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+try:                                    # ml_dtypes ships with jax
+    import ml_dtypes
+    _BFLOAT16 = np.dtype(ml_dtypes.bfloat16)
+except ImportError:                     # pragma: no cover - jax always has it
+    ml_dtypes = None
+    _BFLOAT16 = None
+
+# The repo's measurement dtype is float32 (this container's kernels run on
+# f32 problems unless told otherwise), so 4 is the shared word-size default.
+DEFAULT_WORD_BYTES = 4
+
+# canonical short name -> numpy dtype (the names CLI flags and sweep-point
+# keys use; ``f32`` is the default and is omitted from point keys)
+DTYPES: dict[str, np.dtype] = {
+    "f32": np.dtype(np.float32),
+    "fp16": np.dtype(np.float16),
+    "f64": np.dtype(np.float64),
+}
+if _BFLOAT16 is not None:
+    DTYPES["bf16"] = _BFLOAT16
+
+_ALIASES = {
+    "float32": "f32", "fp32": "f32", "single": "f32",
+    "float16": "fp16", "f16": "fp16", "half": "fp16",
+    "bfloat16": "bf16",
+    "float64": "f64", "fp64": "f64", "double": "f64",
+}
+
+
+def parse_dtype(ref) -> np.dtype:
+    """Resolve a dtype reference (short name, alias, numpy/jax dtype)."""
+    if ref is None:
+        return DTYPES["f32"]
+    if isinstance(ref, str):
+        name = _ALIASES.get(ref.lower(), ref.lower())
+        if name in DTYPES:
+            return DTYPES[name]
+        raise ValueError(f"unknown dtype {ref!r}; known: {sorted(DTYPES)}")
+    return np.dtype(ref)
+
+
+def dtype_name(dtype) -> str:
+    """Canonical short name of `dtype` (``f32``/``bf16``/``fp16``/``f64``)."""
+    dt = parse_dtype(dtype)
+    for name, cand in DTYPES.items():
+        if cand == dt:
+            return name
+    return dt.name
+
+
+def word_bytes(dtype=None) -> int:
+    """Stream word size in bytes of `dtype` (None -> DEFAULT_WORD_BYTES).
+
+    This is what every traffic/model call site should pass instead of a
+    literal: the Eq. 4/5 code balance, the exact DMA counters and the
+    ECM/energy predictions all scale linearly with it.
+    """
+    if dtype is None:
+        return DEFAULT_WORD_BYTES
+    return parse_dtype(dtype).itemsize
+
+
+def finfo(dtype):
+    """`np.finfo` that also understands bfloat16 (via ml_dtypes)."""
+    dt = parse_dtype(dtype)
+    if ml_dtypes is not None and dt == _BFLOAT16:
+        return ml_dtypes.finfo(dt)
+    return np.finfo(dt)
+
+
+def resolve_acc(stream_dtype, acc="auto"):
+    """Accumulator dtype of the MWD in-tile updates for a given stream dtype.
+
+    The mixed-precision kernel keeps the *streams* (HBM grids, VMEM windows,
+    DMA slabs — the bytes Eq. 5 counts) in `stream_dtype` but may compute
+    the T in-tile updates at higher precision:
+
+    * ``"auto"`` (default): float32 accumulation for sub-32-bit streams,
+      native accumulation otherwise — the standard mixed-precision recipe;
+    * ``"native"``: accumulate in the stream dtype (what the pre-dtype
+      kernels always did; bitwise-preserving for f32 problems);
+    * anything `parse_dtype` accepts: explicit accumulator dtype.
+
+    Returns the accumulator `np.dtype`, or None when accumulation happens
+    natively in the stream dtype (no casts inserted in the kernel).
+    """
+    stream = parse_dtype(stream_dtype)
+    if acc == "native" or acc is None:
+        return None
+    if acc == "auto":
+        return np.dtype(np.float32) if stream.itemsize < 4 else None
+    a = parse_dtype(acc)
+    return None if a == stream else a

@@ -15,12 +15,13 @@ measured point.
 from __future__ import annotations
 
 from repro.core.models import mwd_tile_bytes
+from repro.core.precision import DEFAULT_WORD_BYTES
 from repro.core.stencils import StencilSpec
 from repro.core.tiling import compile_schedule, make_diamond_schedule
 
 
 def mwd_pass_traffic(spec: StencilSpec, grid_shape, d_w: int, n_f: int,
-                     word: int = 4) -> dict:
+                     word: int = DEFAULT_WORD_BYTES) -> dict:
     """Bytes DMA'd by stencil_mwd.mwd_run for a full T-step advance, exact."""
     nz, ny, nx = grid_shape
     r = spec.radius
@@ -36,7 +37,7 @@ def mwd_pass_traffic(spec: StencilSpec, grid_shape, d_w: int, n_f: int,
 
 
 def mwd_run_traffic(spec: StencilSpec, grid_shape, n_steps: int, d_w: int,
-                    n_f: int, word: int = 4, fused: bool = True) -> dict:
+                    n_f: int, word: int = DEFAULT_WORD_BYTES, fused: bool = True) -> dict:
     """Exact DMA bytes of stencil_mwd.mwd_run for a full n_steps advance.
 
     Counted straight off the compiled schedule the kernel itself consumes:
@@ -63,7 +64,7 @@ def mwd_run_traffic(spec: StencilSpec, grid_shape, n_steps: int, d_w: int,
 
 
 def ghostzone_pass_traffic(spec: StencilSpec, grid_shape, t_block: int,
-                           bz: int, by: int, word: int = 4) -> dict:
+                           bz: int, by: int, word: int = DEFAULT_WORD_BYTES) -> dict:
     """Exact DMA bytes of one ghost-zone (overlapped) t_block-step pass."""
     nz, ny, nx = grid_shape
     r = spec.radius
@@ -85,7 +86,7 @@ def ghostzone_pass_traffic(spec: StencilSpec, grid_shape, t_block: int,
 
 
 def spatial_pass_traffic(spec: StencilSpec, grid_shape, bz: int,
-                         word: int = 4) -> dict:
+                         word: int = DEFAULT_WORD_BYTES) -> dict:
     """Exact DMA bytes of one spatially-blocked single-sweep pass."""
     nz, ny, nx = grid_shape
     r = spec.radius

@@ -46,6 +46,30 @@ def compressed_pmean(g, err, axis_name: str):
     return g_out, e_out
 
 
+def quantize_slab(x, err=None):
+    """Sender-side int8 quantization of one halo slab (+ error feedback).
+
+    Unlike `compressed_pmean` the scale is LOCAL (max over this slab only,
+    no collective): a halo exchange ships point-to-point, so the receiver
+    just needs the sender's scale shipped alongside the int8 payload — one
+    extra f32 word per slab vs a whole collective for a shared scale.
+
+    Returns (q_int8, scale_f32_scalar, new_err_f32). `err` is the residual
+    from the PREVIOUS quantization of the same slab (error feedback, f32 so
+    sub-32-bit streams don't lose the telescoping); None means no feedback.
+    """
+    x_fb = x.astype(jnp.float32) if err is None else x.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(x_fb)) / 127.0, 1e-30)
+    q = jnp.clip(jnp.round(x_fb / scale), -127, 127).astype(jnp.int8)
+    new_err = x_fb - q.astype(jnp.float32) * scale
+    return q, scale, new_err
+
+
+def dequantize_slab(q, scale, dtype):
+    """Reconstruct a halo slab from int8 payload + shipped scale."""
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
 def init_error_state(params):
     """Zero error-feedback residuals matching the `params` pytree."""
     return jax.tree_util.tree_map(jnp.zeros_like, params)

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.compat import axis_size as _axis_size
+from repro.distributed import compression
 
 
 def _edge_clamp(block, depth: int, axis: int, lo: bool):
@@ -76,9 +77,101 @@ def exchange_2d(block, depth: int, *, axis_z: str, axis_y: str,
     return ext
 
 
-def halo_bytes(local_shape, depth: int, word_bytes: int, n_streams: int) -> int:
-    """Per-super-step ICI bytes per device (both axes, both directions)."""
+def exchange_axis_compressed(block, axis_name: str, axis: int, depth: int,
+                             err_send_lo, err_send_hi):
+    """`exchange_axis` shipping int8 payloads + f32 scales with error feedback.
+
+    Each rank quantizes the slabs it SENDS (`distributed.compression.
+    quantize_slab`: local-max scale, no collective) and ships the int8
+    payload plus one f32 scale per slab; the receiver dequantizes into the
+    stream dtype. `err_send_lo` / `err_send_hi` are this rank's f32
+    error-feedback residuals for its low-/high-side sent slabs — the
+    quantization error of super-step k is added back before quantizing at
+    super-step k+1, so the per-exchange bias telescopes instead of
+    accumulating (same scheme as `compressed_pmean`).
+
+    Returns (extended_block, new_err_send_lo, new_err_send_hi). With a
+    single rank on the axis the exchange degenerates to the exact edge
+    clamp and the residuals pass through unchanged.
+    """
+    if depth > block.shape[axis]:
+        raise ValueError(
+            f"halo depth {depth} exceeds local block extent "
+            f"{block.shape[axis]} on axis {axis}: lower t_block or use a "
+            f"coarser decomposition (single-hop exchange only)")
+    n = _axis_size(axis_name)
+    i = jax.lax.axis_index(axis_name)
+    ndim = block.ndim
+    lo_idx = [slice(None)] * ndim
+    hi_idx = [slice(None)] * ndim
+    lo_idx[axis] = slice(0, depth)
+    hi_idx[axis] = slice(block.shape[axis] - depth, block.shape[axis])
+    if n == 1:
+        lo_halo = _edge_clamp(block, depth, axis, lo=True)
+        hi_halo = _edge_clamp(block, depth, axis, lo=False)
+        return (jnp.concatenate([lo_halo, block, hi_halo], axis=axis),
+                err_send_lo, err_send_hi)
+
+    q_hi, s_hi, new_err_hi = compression.quantize_slab(
+        block[tuple(hi_idx)], err_send_hi)
+    q_lo, s_lo, new_err_lo = compression.quantize_slab(
+        block[tuple(lo_idx)], err_send_lo)
+    fwd = [(r, (r + 1) % n) for r in range(n)]
+    bwd = [(r, (r - 1) % n) for r in range(n)]
+    # halo arriving at my low side = neighbor (i-1)'s high slab + its scale
+    lo_q = jax.lax.ppermute(q_hi, axis_name, fwd)
+    lo_s = jax.lax.ppermute(s_hi, axis_name, fwd)
+    hi_q = jax.lax.ppermute(q_lo, axis_name, bwd)
+    hi_s = jax.lax.ppermute(s_lo, axis_name, bwd)
+    lo_halo = compression.dequantize_slab(lo_q, lo_s, block.dtype)
+    hi_halo = compression.dequantize_slab(hi_q, hi_s, block.dtype)
+    lo_halo = jnp.where(i == 0, _edge_clamp(block, depth, axis, True), lo_halo)
+    hi_halo = jnp.where(i == n - 1, _edge_clamp(block, depth, axis, False),
+                        hi_halo)
+    return (jnp.concatenate([lo_halo, block, hi_halo], axis=axis),
+            new_err_lo, new_err_hi)
+
+
+def exchange_2d_compressed(block, depth: int, err, *, axis_z: str,
+                           axis_y: str, z_dim: int = -3, y_dim: int = -2):
+    """Two-phase compressed deep-halo exchange; returns (ext, new_err).
+
+    `err` is the per-stream error-feedback state: a dict with f32 residual
+    faces ``z_lo``/``z_hi`` (shaped like the z slabs this rank sends) and
+    ``y_lo``/``y_hi`` (shaped like the y slabs of the z-EXTENDED block).
+    Build the initial zeros with `init_halo_error`.
+    """
+    ndim = block.ndim
+    ext, e_zlo, e_zhi = exchange_axis_compressed(
+        block, axis_z, z_dim % ndim, depth, err["z_lo"], err["z_hi"])
+    ext, e_ylo, e_yhi = exchange_axis_compressed(
+        ext, axis_y, y_dim % ndim, depth, err["y_lo"], err["y_hi"])
+    return ext, {"z_lo": e_zlo, "z_hi": e_zhi, "y_lo": e_ylo, "y_hi": e_yhi}
+
+
+def init_halo_error(local_shape, depth: int):
+    """Zero error-feedback faces for one LOCAL block (inside shard_map)."""
+    nz, ny, nx = local_shape[-3:]
+    lead = tuple(local_shape[:-3])
+    z_face = lead + (depth, ny, nx)
+    y_face = lead + (nz + 2 * depth, depth, nx)
+    return {"z_lo": jnp.zeros(z_face, jnp.float32),
+            "z_hi": jnp.zeros(z_face, jnp.float32),
+            "y_lo": jnp.zeros(y_face, jnp.float32),
+            "y_hi": jnp.zeros(y_face, jnp.float32)}
+
+
+def halo_bytes(local_shape, depth: int, word_bytes: int, n_streams: int,
+               compress: bool = False) -> int:
+    """Per-super-step ICI bytes per device (both axes, both directions).
+
+    compress=True counts the int8 wire format of the compressed exchange:
+    1 byte per halo cell plus one f32 scale per sent slab (4 slabs per
+    stream), independent of the stream word size.
+    """
     nz, ny, nx = local_shape[-3:]
     z_face = depth * ny * nx
     y_face = depth * (nz + 2 * depth) * nx
+    if compress:
+        return 2 * (z_face + y_face) * 1 * n_streams + 4 * 4 * n_streams
     return 2 * (z_face + y_face) * word_bytes * n_streams

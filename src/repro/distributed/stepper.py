@@ -74,21 +74,48 @@ def _extend_coeffs(spec: st.StencilSpec, t_block: int, gs: GridSharding,
             svec)
 
 
+def _exchange_state(spec: st.StencilSpec, g: int, gs: GridSharding,
+                    cur, prev, err):
+    """Deep-halo exchange of the solution levels (inside shard_map).
+
+    err=None runs the exact exchange; otherwise err is the per-stream
+    error-feedback state ({"cur": faces[, "prev": faces]}) and the slabs
+    ship int8-compressed (`halo.exchange_2d_compressed`). Coefficients
+    always exchange exact — they are time-invariant, so compressing them
+    would trade a one-time cost for a persistent bias.
+
+    Returns (cur_e, prev_e, new_err).
+    """
+    zax, yax = gs.z_axes, gs.y_axis
+    if err is None:
+        cur_e = halo.exchange_2d(cur, g, axis_z=zax, axis_y=yax)
+        prev_e = (halo.exchange_2d(prev, g, axis_z=zax, axis_y=yax)
+                  if spec.time_order == 2 else cur_e)
+        return cur_e, prev_e, None
+    cur_e, e_cur = halo.exchange_2d_compressed(cur, g, err["cur"],
+                                               axis_z=zax, axis_y=yax)
+    if spec.time_order == 2:
+        prev_e, e_prev = halo.exchange_2d_compressed(prev, g, err["prev"],
+                                                     axis_z=zax, axis_y=yax)
+        return cur_e, prev_e, {"cur": e_cur, "prev": e_prev}
+    return cur_e, cur_e, {"cur": e_cur}
+
+
 def _local_super_step(spec: st.StencilSpec, t_block: int, gs: GridSharding,
-                      grid_shape, hoisted: bool, cur, prev, coeffs):
+                      grid_shape, hoisted: bool, cur, prev, coeffs,
+                      err=None):
     """Advance one t_block super-step on local blocks (inside shard_map).
 
     hoisted=True: coeffs arrive pre-extended (see _extend_coeffs); only the
-    solution levels exchange.
+    solution levels exchange. err (compressed mode) threads the int8
+    error-feedback faces; when given, the return gains a third element.
     """
     r = spec.radius
     g = r * t_block
     nz_g, ny_g, nx_g = grid_shape
     zax, yax = gs.z_axes, gs.y_axis
 
-    ext = lambda a: halo.exchange_2d(a, g, axis_z=zax, axis_y=yax)
-    cur_e = ext(cur)
-    prev_e = ext(prev) if spec.time_order == 2 else cur_e
+    cur_e, prev_e, new_err = _exchange_state(spec, g, gs, cur, prev, err)
     padx = lambda a: jnp.pad(a, [(0, 0)] * (a.ndim - 1) + [(g, g)],
                              mode="edge")
     cur_e, prev_e = padx(cur_e), padx(prev_e)
@@ -117,12 +144,14 @@ def _local_super_step(spec: st.StencilSpec, t_block: int, gs: GridSharding,
         new = jnp.where(frame, frame_vals, new)
         a, b = new, a
     crop = (slice(g, g + nz_l), slice(g, g + ny_l), slice(g, g + nx_l))
+    if err is not None:
+        return a[crop], b[crop], new_err
     return a[crop], b[crop]
 
 
 def _local_super_step_mwd(spec: st.StencilSpec, plan: MWDPlan, t_block: int,
                           gs: GridSharding, grid_shape, hoisted: bool,
-                          scalars, cur, prev, coeffs):
+                          scalars, cur, prev, coeffs, err=None):
     """MWD-kernel local super-step: ONE fused pallas_call per halo exchange.
 
     Same deep-halo contract as _local_super_step, but the t_block local steps
@@ -139,9 +168,7 @@ def _local_super_step_mwd(spec: st.StencilSpec, plan: MWDPlan, t_block: int,
     nz_g, ny_g, nx_g = grid_shape
     zax, yax = gs.z_axes, gs.y_axis
 
-    ext = lambda a: halo.exchange_2d(a, g, axis_z=zax, axis_y=yax)
-    cur_e = ext(cur)
-    prev_e = ext(prev) if spec.time_order == 2 else cur_e
+    cur_e, prev_e, new_err = _exchange_state(spec, g, gs, cur, prev, err)
     padx = lambda a: jnp.pad(a, [(0, 0)] * (a.ndim - 1) + [(g, g)],
                              mode="edge")
     cur_e, prev_e = padx(cur_e), padx(prev_e)
@@ -179,6 +206,8 @@ def _local_super_step_mwd(spec: st.StencilSpec, plan: MWDPlan, t_block: int,
                                fused=plan.fused, interior=interior,
                                y_domain=(0, ny_e))
     crop = (slice(g, g + nz_l), slice(g, g + ny_l), slice(g, g + nx_l))
+    if err is not None:
+        return a[crop], b[crop], new_err
     return a[crop], b[crop]
 
 
@@ -194,7 +223,8 @@ def _coeff_specs(spec: st.StencilSpec, gs: GridSharding) -> tuple:
 
 def make_super_step(spec: st.StencilSpec, mesh: jax.sharding.Mesh,
                     grid_shape, t_block: int, *, hoisted: bool = False,
-                    plan: MWDPlan | None = None, scalars=None):
+                    plan: MWDPlan | None = None, scalars=None,
+                    compress: bool = False):
     """Build the jitted distributed super-step: (cur, prev, coeffs) -> state.
 
     `coeffs` is the canonical (stacked arrays, scalar vector) pair — see
@@ -208,6 +238,13 @@ def make_super_step(spec: st.StencilSpec, mesh: jax.sharding.Mesh,
     t_block jnp sweeps — one launch per halo exchange. `scalars` carries
     the op's scalar coefficients as static Python floats (the kernel
     inlines them); required for scalar-coefficient operators.
+
+    compress=True ships the solution halos int8-compressed with error
+    feedback: the step becomes (cur, prev, coeffs, err) -> (cur, prev,
+    err'), where `err` is the sharded residual-face pytree from
+    `init_halo_error_global` (thread the returned err' into the next
+    super-step — dropping it forfeits the telescoping). Coefficients still
+    exchange exact.
     """
     gs = GridSharding(mesh)
     kwargs = {}
@@ -218,14 +255,60 @@ def make_super_step(spec: st.StencilSpec, mesh: jax.sharding.Mesh,
     else:
         local = partial(_local_super_step, spec, t_block, gs, grid_shape,
                         hoisted)
-    fn = _shard_map(
-        local,
-        mesh=mesh,
-        in_specs=(gs.spec(), gs.spec(), _coeff_specs(spec, gs)),
-        out_specs=(gs.spec(), gs.spec()),
-        **kwargs,
-    )
+    if compress:
+        # one gs.spec() per err subtree: PartitionSpecs act as pytree
+        # prefixes, and every residual face shards exactly like the grid
+        fn = _shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(gs.spec(), gs.spec(), _coeff_specs(spec, gs),
+                      gs.spec()),
+            out_specs=(gs.spec(), gs.spec(), gs.spec()),
+            **kwargs,
+        )
+    else:
+        fn = _shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(gs.spec(), gs.spec(), _coeff_specs(spec, gs)),
+            out_specs=(gs.spec(), gs.spec()),
+            **kwargs,
+        )
     return jax.jit(fn)
+
+
+def init_halo_error_global(spec: st.StencilSpec, mesh, grid_shape,
+                           t_block: int):
+    """Sharded zero error-feedback faces for the compressed super-step.
+
+    Global face arrays shaped so `GridSharding.spec()` shards each one into
+    exactly the local faces `halo.exchange_2d_compressed` expects: z faces
+    stack the per-shard (g, ny_l, nx) slabs along z, y faces stack the
+    per-shard (nz_l + 2g, g, nx) slabs along both z and y. One entry per
+    exchanged stream: {"cur": faces} (+ "prev" for second-order ops).
+    """
+    gs = GridSharding(mesh)
+    g = spec.radius * t_block
+    nz, ny, nx = grid_shape
+    n_z = 1
+    for a in gs.z_axes:
+        n_z *= mesh.shape[a]
+    n_y = mesh.shape[gs.y_axis]
+    nz_l = nz // n_z
+    z_face = (g * n_z, ny, nx)
+    y_face = ((nz_l + 2 * g) * n_z, g * n_y, nx)
+    sh = gs.sharding()
+
+    def faces():
+        return {"z_lo": jax.device_put(jnp.zeros(z_face, jnp.float32), sh),
+                "z_hi": jax.device_put(jnp.zeros(z_face, jnp.float32), sh),
+                "y_lo": jax.device_put(jnp.zeros(y_face, jnp.float32), sh),
+                "y_hi": jax.device_put(jnp.zeros(y_face, jnp.float32), sh)}
+
+    err = {"cur": faces()}
+    if spec.time_order == 2:
+        err["prev"] = faces()
+    return err
 
 
 def make_coeff_extender(spec: st.StencilSpec, mesh: jax.sharding.Mesh,
@@ -323,8 +406,16 @@ def extended_coeff_sds(spec: st.StencilSpec, mesh, grid_shape, t_block: int,
 
 def run_distributed(spec: st.StencilSpec, mesh, state, coeffs, n_steps: int,
                     t_block: int = 2, *, hoisted: bool = False,
-                    plan: MWDPlan | str | None = None):
+                    plan: MWDPlan | str | None = None,
+                    compress: bool = False):
     """Place the problem on the mesh and advance n_steps (super-stepped).
+
+    compress=True ships solution halos int8-compressed with error feedback
+    (`halo.exchange_2d_compressed`): ~word_size x less ICI halo traffic per
+    super-step at a quantization error the per-op budget test harness
+    bounds. The residual state threads through the whole run; a partial
+    final super-step (t_block does not divide n_steps) restarts it at zero
+    because the residual faces are shaped by the halo depth g = R * tb.
 
     plan: run each super-step as one fused MWD kernel launch per device
     (see make_super_step) instead of t_block jnp sweeps. Pass "auto" to
@@ -375,13 +466,20 @@ def run_distributed(spec: st.StencilSpec, mesh, state, coeffs, n_steps: int,
             raise ValueError("hoisted mode needs t_block | n_steps")
         coeffs = make_coeff_extender(spec, mesh, t_block)(coeffs)
     step = make_super_step(spec, mesh, cur.shape, t_block, hoisted=hoisted,
-                           plan=plan, scalars=scalars)
+                           plan=plan, scalars=scalars, compress=compress)
+    err = (init_halo_error_global(spec, mesh, cur.shape, t_block)
+           if compress else None)
     done = 0
     while done < n_steps:
         tb = min(t_block, n_steps - done)
         if tb != t_block:
             step = make_super_step(spec, mesh, cur.shape, tb, plan=plan,
-                                   scalars=scalars)
-        cur, prev = step(cur, prev, coeffs)
+                                   scalars=scalars, compress=compress)
+            if compress:    # residual faces are g-shaped: restart at zero
+                err = init_halo_error_global(spec, mesh, cur.shape, tb)
+        if compress:
+            cur, prev, err = step(cur, prev, coeffs, err)
+        else:
+            cur, prev = step(cur, prev, coeffs)
         done += tb
     return cur, prev

@@ -20,7 +20,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core import ir
+from repro.core import ir, precision
 from repro.core.mwd import MWDPlan
 from repro.core.stencils import StencilSpec
 from repro.kernels import ref as _ref
@@ -87,15 +87,15 @@ def ghostzone(spec: StencilSpec, state, coeffs, n_steps: int,
 
 
 @partial(jax.jit, static_argnames=("spec", "scalars", "n_steps", "d_w", "n_f",
-                                   "fused"))
-def _mwd(spec, state, arrays, scalars, n_steps, d_w, n_f, fused):
+                                   "fused", "acc"))
+def _mwd(spec, state, arrays, scalars, n_steps, d_w, n_f, fused, acc=None):
     return stencil_mwd.mwd_run(spec, state, arrays, scalars, n_steps,
-                               d_w=d_w, n_f=n_f, fused=fused)
+                               d_w=d_w, n_f=n_f, fused=fused, acc_dtype=acc)
 
 
 def mwd(spec: StencilSpec, state, coeffs, n_steps: int,
         d_w: int = 8, n_f: int = 2, fused: bool = True,
-        plan: MWDPlan | str | None = None):
+        plan: MWDPlan | str | None = None, dtype=None, acc="auto"):
     """Paper-faithful multi-threaded wavefront diamond blocking.
 
     fused=True runs the whole compiled schedule in a single pallas_call with
@@ -106,17 +106,35 @@ def mwd(spec: StencilSpec, state, coeffs, n_steps: int,
     the tuned plan for this (stencil, grid, hardware) from the persistent
     registry — write it with `python -m repro.launch.tune`; misses fall
     back to the model-scored auto-tuner (no measurement).
+
+    dtype: optional stream dtype (anything `core.precision.parse_dtype`
+    accepts, e.g. "bf16"). State and coefficient arrays are cast BEFORE
+    plan resolution, so the registry key's ``w<word>`` segment and the
+    analytic code balance both see the reduced word. The accuracy contract
+    is `spec.tolerance(dtype)`; None keeps the inputs' dtype untouched.
+
+    acc: accumulator policy for the in-tile updates — "auto" (f32
+    accumulation for sub-32-bit streams), "native", or an explicit dtype
+    (`core.precision.resolve_acc`).
     """
+    if dtype is not None:
+        dt = precision.parse_dtype(dtype)
+        state = tuple(jnp.asarray(s, dt) for s in state)
     if plan is not None:
         p = resolve_plan(spec, state, plan)
         d_w, n_f, fused = p.d_w, p.n_f, p.fused
     arrays, scalars = _split_coeffs(spec, coeffs)
-    return _mwd(spec, state, arrays, scalars, n_steps, d_w, n_f, fused)
+    if dtype is not None and arrays is not None:
+        arrays = jnp.asarray(arrays, dt)
+    acc_dt = precision.resolve_acc(state[0].dtype, acc)
+    return _mwd(spec, state, arrays, scalars, n_steps, d_w, n_f, fused,
+                acc_dt)
 
 
 @partial(jax.jit, static_argnames=("spec", "scalars", "n_steps", "d_w", "n_f",
-                                   "fused"))
-def _mwd_batched(spec, state, arrays, scalars, n_steps, d_w, n_f, fused):
+                                   "fused", "acc"))
+def _mwd_batched(spec, state, arrays, scalars, n_steps, d_w, n_f, fused,
+                 acc=None):
     # per-item inputs arrive as tuples (pytrees) and stack INSIDE the jit:
     # XLA fuses the stack with the launch padding, so the host pays one
     # dispatch for the whole batch instead of B small stacking ops
@@ -126,12 +144,13 @@ def _mwd_batched(spec, state, arrays, scalars, n_steps, d_w, n_f, fused):
     if isinstance(arrays, tuple):
         arrays = jnp.stack(arrays)
     return stencil_mwd.mwd_run_batched(spec, (cur, prev), arrays, scalars,
-                                       n_steps, d_w=d_w, n_f=n_f, fused=fused)
+                                       n_steps, d_w=d_w, n_f=n_f, fused=fused,
+                                       acc_dtype=acc)
 
 
 def mwd_batched(spec: StencilSpec, states, coeffs, n_steps: int,
                 d_w: int = 8, n_f: int = 2, fused: bool = True,
-                plan: MWDPlan | str | None = None):
+                plan: MWDPlan | str | None = None, dtype=None, acc="auto"):
     """Advance B independent same-shaped grids in ONE fused MWD launch.
 
     `states` is either a sequence of B per-request ``(cur, prev)`` pairs or
@@ -151,17 +170,36 @@ def mwd_batched(spec: StencilSpec, states, coeffs, n_steps: int,
 
     plan: an `MWDPlan` or "auto"; "auto" resolves registry-first under the
     batched ``b<B>`` plan key (see `repro.core.registry.plan_key`).
+
+    dtype / acc: stream dtype and accumulator policy, as in `ops.mwd`.
+    A batch whose members disagree on dtype is refused unless `dtype=` is
+    given explicitly — `jnp.stack` would otherwise silently promote every
+    member to the widest dtype, changing both the traffic (word size) and
+    the accuracy contract behind the caller's back.
     """
+    dt = precision.parse_dtype(dtype) if dtype is not None else None
     if (isinstance(states, (tuple, list)) and len(states) == 2
             and getattr(states[0], "ndim", 0) == 4):
         cur, prev = states
-        b, grid_shape, dtype = cur.shape[0], cur.shape[1:], cur.dtype
+        if dt is not None:
+            cur, prev = jnp.asarray(cur, dt), jnp.asarray(prev, dt)
+        b, grid_shape, sdt = cur.shape[0], cur.shape[1:], cur.dtype
     else:
         cur = tuple(s[0] for s in states)   # stacked inside the jit
         prev = tuple(s[1] for s in states)
-        b, grid_shape, dtype = len(cur), cur[0].shape, cur[0].dtype
+        member_dts = {x.dtype for x in cur} | {x.dtype for x in prev}
+        if dt is None and len(member_dts) > 1:
+            raise ValueError(
+                f"{spec.name}: mixed-dtype batch "
+                f"{sorted(str(d) for d in member_dts)} — stacking would "
+                f"silently promote; pass dtype= to cast explicitly or "
+                f"batch per dtype")
+        if dt is not None:
+            cur = tuple(jnp.asarray(x, dt) for x in cur)
+            prev = tuple(jnp.asarray(x, dt) for x in prev)
+        b, grid_shape, sdt = len(cur), cur[0].shape, cur[0].dtype
     if plan is not None:
-        p = resolve_plan(spec, (jax.ShapeDtypeStruct(grid_shape, dtype),),
+        p = resolve_plan(spec, (jax.ShapeDtypeStruct(grid_shape, sdt),),
                          plan, batch=b)
         d_w, n_f, fused = p.d_w, p.n_f, p.fused
     if isinstance(coeffs, list):        # per-request packed coefficients
@@ -174,8 +212,11 @@ def mwd_batched(spec: StencilSpec, states, coeffs, n_steps: int,
         if arrays is not None:
             arrays = tuple(arrays for _ in range(b))
         scalars = tuple(float(x) for x in scalars)
+    if dt is not None and arrays is not None:
+        arrays = tuple(jnp.asarray(a, dt) for a in arrays)
+    acc_dt = precision.resolve_acc(sdt, acc)
     return _mwd_batched(spec, (cur, prev), arrays, scalars, n_steps,
-                        d_w, n_f, fused)
+                        d_w, n_f, fused, acc_dt)
 
 
 @partial(jax.jit, static_argnames=("spec", "n_steps"))

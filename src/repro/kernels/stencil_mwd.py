@@ -67,7 +67,7 @@ def sync_dirichlet_frame(cur, prev, r: int):
 
 
 def _mwd_kernel(spec: st.StencilSpec, d_w: int, n_f: int, scalars,
-                n_in: int, fused: bool, batched: bool, *refs):
+                n_in: int, fused: bool, batched: bool, acc_dtype, *refs):
     """One (row, tile, j) grid step of the MWD schedule.
 
     refs = (bounds, p0s, w0, y0s, y1s, active,      # scalar prefetch
@@ -86,6 +86,14 @@ def _mwd_kernel(spec: st.StencilSpec, d_w: int, n_f: int, scalars,
     batch-free — the grid is sequential, so one live window serves every
     entry — and per-entry dataflow is identical to the B=1 kernel, which is
     what makes the batched launch bitwise-equal to a per-item loop.
+
+    acc_dtype decouples the accumulator from the stream dtype: every HBM
+    grid, VMEM window and DMA slab stays in the stream dtype (the bytes
+    Eq. 5 counts — halving the word halves the code balance), while the T
+    in-tile updates cast the live window slices up to `acc_dtype` around the
+    generated sweep and the result back down before the masked write. None
+    accumulates natively in the stream dtype (the pre-dtype behavior,
+    bitwise-preserving for f32 problems).
     """
     bounds_ref, p0_ref, w0_ref, y0_ref, y1_ref, act_ref = refs[:6]
     inputs = refs[6:6 + n_in]
@@ -154,7 +162,12 @@ def _mwd_kernel(spec: st.StencilSpec, d_w: int, n_f: int, scalars,
                 pws = dst_b[zb - r:zb + n_f + r]
                 cf = (coeff_buf[:, zb - r:zb + n_f + r]
                       if spec.n_coeff_arrays else None)
+                if acc_dtype is not None:
+                    ws, pws = ws.astype(acc_dtype), pws.astype(acc_dtype)
+                    cf = cf.astype(acc_dtype) if cf is not None else None
                 new = sweep(ws, pws, cf, scalars)[r:r + n_f]
+                if acc_dtype is not None:
+                    new = new.astype(dst_b.dtype)
 
                 y0 = y0_ref[row, k, tau]
                 y1 = y1_ref[row, k, tau]
@@ -193,7 +206,8 @@ def _mwd_kernel(spec: st.StencilSpec, d_w: int, n_f: int, scalars,
 
 def mwd_run(spec: st.StencilSpec, state, arrays, scalars, n_steps: int, *,
             d_w: int = 8, n_f: int = 2, fused: bool = True,
-            interior=None, y_domain: tuple[int, int] | None = None):
+            interior=None, y_domain: tuple[int, int] | None = None,
+            acc_dtype=None):
     """Advance n_steps with the MWD schedule: state -> state.
 
     `arrays` is the op's stacked (A, z, y, x) coefficient stream (or None);
@@ -212,15 +226,19 @@ def mwd_run(spec: st.StencilSpec, state, arrays, scalars, n_steps: int, *,
     y_domain: (y_lo, y_hi) diamond tessellation extent; defaults to the
     interior [R, ny-R). The distributed stepper passes (0, ny) so halo cells
     advance intermediate levels too.
+
+    acc_dtype: optional accumulator dtype for the in-tile updates (see
+    `_mwd_kernel`); None accumulates natively in the stream dtype.
     """
     return _mwd_run_impl(spec, state, arrays, scalars, n_steps, d_w=d_w,
                          n_f=n_f, fused=fused, interior=interior,
-                         y_domain=y_domain, batched=False)
+                         y_domain=y_domain, batched=False,
+                         acc_dtype=acc_dtype)
 
 
 def mwd_run_batched(spec: st.StencilSpec, state, arrays, scalars,
                     n_steps: int, *, d_w: int = 8, n_f: int = 2,
-                    fused: bool = True):
+                    fused: bool = True, acc_dtype=None):
     """Advance B independent same-shaped grids in ONE launch: state -> state.
 
     `state` is (cur, prev) with a leading batch axis ``(B, nz, ny, nx)``;
@@ -242,12 +260,16 @@ def mwd_run_batched(spec: st.StencilSpec, state, arrays, scalars,
                          f"got shape {cur.shape}")
     return _mwd_run_impl(spec, state, arrays, scalars, n_steps, d_w=d_w,
                          n_f=n_f, fused=fused, interior=None, y_domain=None,
-                         batched=True)
+                         batched=True, acc_dtype=acc_dtype)
 
 
 def _mwd_run_impl(spec: st.StencilSpec, state, arrays, scalars, n_steps: int,
                   *, d_w: int, n_f: int, fused: bool, interior, y_domain,
-                  batched: bool):
+                  batched: bool, acc_dtype=None):
+    if acc_dtype is not None:
+        acc_dtype = jnp.dtype(acc_dtype)
+        if acc_dtype == state[0].dtype:   # native accumulation: no casts
+            acc_dtype = None
     r = spec.radius
     if d_w % (2 * r) or d_w % n_f:
         raise ValueError(f"need 2R | d_w and n_f | d_w (d_w={d_w}, R={r}, "
@@ -298,7 +320,7 @@ def _mwd_run_impl(spec: st.StencilSpec, state, arrays, scalars, n_steps: int,
 
     def launch(fused_mode, tables, n_rows, bufs_in, aliases):
         kern = functools.partial(_mwd_kernel, spec, d_w, n_f, scalars,
-                                 n_in, fused_mode, batched)
+                                 n_in, fused_mode, batched, acc_dtype)
         return pl.pallas_call(
             kern,
             grid_spec=pltpu.PrefetchScalarGridSpec(

@@ -148,25 +148,31 @@ def probe_lm_cell(cfg, shape_name: str, mesh, *, chunk: int = 2048,
 
 
 def lower_girih_cell(arch: str, grid_name: str, mesh, *, t_block: int = 0,
-                     hoisted: bool = False):
+                     hoisted: bool = False, dtype=None):
     """Distributed deep-halo super-step for one stencil at production size.
 
     `arch` is girih-<op> where <op> is anything repro.core.ir.resolve_op
     accepts: a paper stencil, a registered custom op, or module.path:ATTR.
     The coefficient ShapeDtypeStructs/shardings are IR-derived (the canonical
     stacked-arrays + scalar-vector pair), so custom ops lower with no edits.
+
+    `dtype` lowers the cell at a reduced stream dtype (f32 default): the
+    word size feeds the ghost-zone code balance, so the modeled HBM bytes
+    column reflects the halved word.
     """
-    from repro.core import ir
+    from repro.core import ir, precision
     from repro.distributed import stepper
 
     spec = ir.resolve_op(arch.removeprefix("girih-"))
     nz, ny, nx = GIRIH_GRIDS[grid_name]
     tb = t_block or (4 if spec.radius == 1 else 2)
     gs = stepper.GridSharding(mesh)
-    dt = jnp.float32
+    dt = jnp.dtype(precision.parse_dtype(dtype))
+    word = precision.word_bytes(dt)
     sds3 = jax.ShapeDtypeStruct((nz, ny, nx), dt)
     if hoisted:
-        coeff_sds = stepper.extended_coeff_sds(spec, mesh, (nz, ny, nx), tb)
+        coeff_sds = stepper.extended_coeff_sds(spec, mesh, (nz, ny, nx), tb,
+                                               dt)
     else:
         coeff_sds = stepper.coeff_sds(spec, (nz, ny, nx), dt)
     coeff_sh = (gs.sharding(leading=1), NamedSharding(mesh, P()))
@@ -189,17 +195,19 @@ def lower_girih_cell(arch: str, grid_name: str, mesh, *, t_block: int = 0,
         if a in mesh.axis_names:
             n_z *= mesh.shape[a]
     n_y = mesh.shape["model"]
-    bc = cmodels.ghostzone_code_balance(spec, tb, ny // n_y, nz // n_z)
+    bc = cmodels.ghostzone_code_balance(spec, tb, ny // n_y, nz // n_z,
+                                        word_bytes=word)
     mbytes = bc * lups / mesh.devices.size
     return lowered, mflops, mbytes, \
-        f"t_block={tb} hoisted={hoisted} Bc_gz={bc:.2f}B/LUP"
+        (f"t_block={tb} hoisted={hoisted} "
+         f"dtype={precision.dtype_name(dt)} Bc_gz={bc:.2f}B/LUP")
 
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
              chunk: int = 2048, n_layers: int = 0, accum: int = 1,
              probe: bool = True, verbose: bool = True, t_block: int = 0,
              hoisted: bool = False, variant: dict | None = None,
-             tag: str = ""):
+             tag: str = "", dtype=None):
     """Lower + compile one dry-run cell and extract its roofline record.
 
     LM cells additionally run the unrolled small-L cost probe (see
@@ -212,7 +220,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
     probed = None
     if arch.startswith("girih-"):
         lowered, mflops, mbytes, notes = lower_girih_cell(
-            arch, shape_name, mesh, t_block=t_block, hoisted=hoisted)
+            arch, shape_name, mesh, t_block=t_block, hoisted=hoisted,
+            dtype=dtype)
     else:
         cfg = configs.get(arch)
         if variant:
@@ -335,6 +344,10 @@ def main():
     ap.add_argument("--t-block", type=int, default=0, help="girih t_block")
     ap.add_argument("--hoisted", action="store_true",
                     help="girih: hoist coefficient halo exchange")
+    ap.add_argument("--dtype", default=None,
+                    help="girih: stream dtype of the lowered cell (f32/"
+                         "bf16/fp16); the modeled bytes column scales with "
+                         "the word")
     ap.add_argument("--seq-parallel", action="store_true",
                     help="LM: sequence-parallel attention")
     ap.add_argument("--capacity-factor", type=float, default=0.0)
@@ -392,7 +405,7 @@ def main():
                                chunk=args.chunk, n_layers=args.n_layers,
                                accum=max(accum, 1), t_block=args.t_block,
                                hoisted=args.hoisted, variant=variant,
-                               tag=args.tag)
+                               tag=args.tag, dtype=args.dtype)
                 signal.alarm(0)
                 results.append(dict(res.to_json(), tag=args.tag))
             except Exception as e:

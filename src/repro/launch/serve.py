@@ -334,7 +334,8 @@ def serve_stencil(name: str, grid, n_steps: int, n_requests: int, *,
                   arrival_ms: float = 1.0, seed: int = 0, pad=None,
                   telemetry=None, interactive_every: int = 0,
                   deadline_ms: float | None = None,
-                  max_queue_depth: int | None = None, plan="auto"):
+                  max_queue_depth: int | None = None, plan="auto",
+                  dtype=None):
     """Stencil-advance request-queue server: continuous batching over MWD.
 
     `name` is any operator `repro.core.ir.resolve_op` knows: one of the four
@@ -354,17 +355,24 @@ def serve_stencil(name: str, grid, n_steps: int, n_requests: int, *,
     `MWDPlan` applied to every launch, which pins the reduction shape so
     responses can be compared bitwise against same-plan sequential runs.
 
+    `dtype` generates every request at that stream dtype (f32/bf16/fp16):
+    the bucket key already separates dtypes, so a reduced-precision tenant
+    never shares a fused launch with an f32 one, and plan resolution keys
+    on the reduced word size.
+
     Returns a report dict (plan, source, latency percentiles, GLUP/s,
     per-batch records, padding/rejection/deadline telemetry).
     """
-    from repro.core import ir, padding, registry, scheduler
+    from repro.core import ir, padding, precision, registry, scheduler
     from repro.core import stencils as stc
 
     spec = ir.resolve_op(name)
     grids = ([tuple(g) for g in grid] if grid and isinstance(grid[0], (tuple, list))
              else [tuple(grid)] if grid else [registry.default_grid(spec)])
     ladder = padding.parse_ladder(pad)
-    problems = [stc.make_problem(spec, grids[i % len(grids)], seed=seed + i)
+    dt = precision.parse_dtype(dtype) if dtype is not None else None
+    problems = [stc.make_problem(spec, grids[i % len(grids)], dtype=dt,
+                                 seed=seed + i)
                 for i in range(n_requests)]
     word = problems[0][0][0].dtype.itemsize
     classes: dict[tuple, list] = {}
@@ -468,6 +476,10 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--pad", default="exact",
                     help="padding ladder: 'exact', 'pow2', or rungs '8,16,32'"
                          " — mixed sizes in one class share fused launches")
+    ap.add_argument("--dtype", default=None,
+                    help="stream dtype of every stencil request (f32/bf16/"
+                         "fp16); bucket keys separate dtypes, so reduced-"
+                         "precision and f32 tenants never share a launch")
     ap.add_argument("--telemetry", default=None,
                     help="live telemetry sink: 'stdout' or 'jsonl:<path>'")
     ap.add_argument("--interactive-every", type=int, default=0,
@@ -507,7 +519,8 @@ def main(argv=None):
                       telemetry=args.telemetry,
                       interactive_every=args.interactive_every,
                       deadline_ms=args.deadline_ms,
-                      max_queue_depth=args.max_queue_depth)
+                      max_queue_depth=args.max_queue_depth,
+                      dtype=args.dtype)
         return
 
     cfg = configs.get(args.arch)

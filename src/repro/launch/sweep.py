@@ -48,8 +48,9 @@ import tempfile
 import time
 
 from repro import hw
-from repro.core import autotune, ir, models, registry as reg, traffic
+from repro.core import autotune, ir, models, precision, registry as reg
 from repro.core import stencils as st
+from repro.core import traffic
 from repro.core.mwd import MWDPlan
 
 SCHEMA_VERSION = 1
@@ -64,21 +65,28 @@ SMOKE_SIZES = {1: (8, 12), 4: (16, 20)}
 
 
 def point_key(spec: st.StencilSpec, grid_shape, n_steps: int, fused: bool,
-              batch: int, word_bytes: int = 4,
-              distributed: bool = False) -> str:
+              batch: int, word_bytes: int = 4, distributed: bool = False,
+              dtype_name: str = "f32") -> str:
     """Stable identity of one sweep point (resume skips existing keys).
 
     Embeds the operator's structural IR fingerprint (same convention as the
     plan registry), the grid, the step count, the execution mode, the batch
     size, and the word size; the optional ``|dist`` suffix separates the
     distributed super-stepper leg from the single-launch point on the same
-    problem. The hardware fingerprint is NOT part of the key — it is stored
-    on the point, and resume treats a fingerprint mismatch as a miss.
+    problem, and a non-f32 stream dtype appends its short name (``|bf16``)
+    so a same-grid-different-dtype point is a distinct key even at an equal
+    word size (bf16 vs fp16 are both w2 but different contracts). The
+    hardware fingerprint is NOT part of the key — it is stored on the
+    point, and resume treats a fingerprint mismatch as a miss.
     """
     nz, ny, nx = grid_shape
     key = (f"{spec.name}@{spec.fingerprint}|{nz}x{ny}x{nx}|s{n_steps}"
            f"|{'fused' if fused else 'row'}|b{batch}|w{word_bytes}")
-    return key + ("|dist" if distributed else "")
+    if distributed:
+        key += "|dist"
+    if dtype_name != "f32":
+        key += f"|{dtype_name}"
+    return key
 
 
 def ladder(sizes) -> list[tuple[int, int, int]]:
@@ -97,12 +105,14 @@ class PointSpec:
     batch: int
     word_bytes: int
     distributed: bool = False
+    dtype_name: str = "f32"
 
     @property
     def key(self) -> str:
         """The point's identity under `point_key`."""
         return point_key(self.spec, self.grid, self.n_steps, self.fused,
-                         self.batch, self.word_bytes, self.distributed)
+                         self.batch, self.word_bytes, self.distributed,
+                         self.dtype_name)
 
 
 def model_point(spec: st.StencilSpec, grid, n_steps: int, plan: MWDPlan,
@@ -195,7 +205,8 @@ def measure_point(ps: PointSpec, plan: MWDPlan, *, reps: int = 2,
     """Wall-clock one sweep point: median seconds + GLUP/s of the launch."""
     import numpy as np
 
-    probs = [st.make_problem(ps.spec, ps.grid, seed=seed + i)
+    dt = precision.parse_dtype(ps.dtype_name)
+    probs = [st.make_problem(ps.spec, ps.grid, dtype=dt, seed=seed + i)
              for i in range(ps.batch)]
     t = autotune.time_mwd_launch(
         ps.spec, [p[0] for p in probs], [p[1] for p in probs], ps.n_steps,
@@ -224,7 +235,9 @@ def measure_distributed_point(ps: PointSpec, registry: reg.PlanRegistry, *,
     from repro.distributed import elastic, stepper
 
     mesh = elastic.build_mesh()
-    state, coeffs = st.make_problem(ps.spec, ps.grid, seed=seed)
+    state, coeffs = st.make_problem(ps.spec, ps.grid,
+                                    dtype=precision.parse_dtype(
+                                        ps.dtype_name), seed=seed)
     cur, prev = state
     gs = stepper.GridSharding(mesh)
     shape_e = stepper.local_extended_shape(ps.spec, mesh, ps.grid, t_block)
@@ -310,7 +323,8 @@ def done_keys(results_path: str) -> dict[str, str]:
 # ---------------------------------------------------------------------------
 
 def iter_points(specs, grids, modes, batches, n_steps: int, word_bytes: int,
-                distributed: bool = False) -> list[PointSpec]:
+                distributed: bool = False,
+                dtype_name: str = "f32") -> list[PointSpec]:
     """Deterministic sweep lattice: stencil-major, then grid, mode, batch."""
     points = []
     for spec in specs:
@@ -319,10 +333,12 @@ def iter_points(specs, grids, modes, batches, n_steps: int, word_bytes: int,
                 for batch in batches:
                     points.append(PointSpec(spec, tuple(grid), n_steps,
                                             mode == "fused", batch,
-                                            word_bytes))
+                                            word_bytes,
+                                            dtype_name=dtype_name))
             if distributed:
                 points.append(PointSpec(spec, tuple(grid), n_steps, True, 1,
-                                        word_bytes, distributed=True))
+                                        word_bytes, distributed=True,
+                                        dtype_name=dtype_name))
     return points
 
 
@@ -368,6 +384,7 @@ def run_point(ps: PointSpec, registry: reg.PlanRegistry, *, reps: int,
         "mode": "fused" if ps.fused else "row",
         "batch": ps.batch,
         "word_bytes": ps.word_bytes,
+        "dtype": ps.dtype_name,
         "distributed": ps.distributed,
         "plan": dataclasses.asdict(plan),
         "plan_source": plan_source,
@@ -383,7 +400,7 @@ def run_sweep(specs, grids, *, modes=("fused",), batches=(1,),
               results_path: str = DEFAULT_RESULTS, resume: bool = True,
               tune: str = "none", distributed: bool = False,
               word_bytes: int = 4, registry: reg.PlanRegistry | None = None,
-              verbose: bool = True) -> dict:
+              verbose: bool = True, dtype_name: str = "f32") -> dict:
     """Run (or resume) a sweep and persist every point as it completes.
 
     Returns a summary dict: ``n_measured``, ``n_skipped``, ``seconds``,
@@ -391,9 +408,13 @@ def run_sweep(specs, grids, *, modes=("fused",), batches=(1,),
     present under the current hardware fingerprint in any sibling
     ``results/sweep*.json`` are skipped when `resume`; stale points (other
     fingerprint) are re-measured and overwritten.
+
+    dtype_name: stream dtype of every point (``--dtype``); the problems are
+    generated at that dtype and `word_bytes` should be its word size so the
+    plan registry and the traffic/model columns see the reduced word.
     """
     points = iter_points(specs, grids, modes, batches, n_steps, word_bytes,
-                         distributed)
+                         distributed, dtype_name)
     return run_sweep_points(points, registry=registry or
                             reg.default_registry(),
                             results_path=results_path, resume=resume,
@@ -442,6 +463,14 @@ def _smoke_points(word_bytes: int) -> list[PointSpec]:
                             word_bytes))
     points.append(PointSpec(seven, (n0,) * 3, prof["n_steps"], True, 1,
                             word_bytes, distributed=True))
+    # reduced-precision leg: one bf16 fused point per stencil at the first
+    # ladder size — the bf16-vs-f32 B/LUP rows the report's comparison
+    # table and the CI precision gate consume
+    bf16_w = precision.word_bytes("bf16")
+    for spec in prof["specs"]:
+        n = SMOKE_SIZES.get(spec.radius, SMOKE_SIZES[4])[0]
+        points.append(PointSpec(spec, (n,) * 3, prof["n_steps"], True, 1,
+                                bf16_w, dtype_name="bf16"))
     return points
 
 
@@ -480,7 +509,15 @@ def main(argv=None) -> dict:
     ap.add_argument("--reps", type=int, default=2,
                     help="timed launches per point (median)")
     ap.add_argument("--warmup", type=int, default=1)
-    ap.add_argument("--word-bytes", type=int, default=4)
+    ap.add_argument("--dtype", type=str, default="f32",
+                    help="stream dtype of every point (f32/bf16/fp16); "
+                         "problems are generated at this dtype and the "
+                         "word size follows it — the reduced-precision "
+                         "sweep leg (--smoke always includes a built-in "
+                         "bf16 leg)")
+    ap.add_argument("--word-bytes", type=int, default=None,
+                    help="override the stream word size recorded on each "
+                         "point (default: derived from --dtype)")
     ap.add_argument("--results", type=str, default=None,
                     help=f"results file (default {DEFAULT_RESULTS}, smoke "
                          f"{SMOKE_RESULTS}); resume scans its directory")
@@ -509,16 +546,20 @@ def main(argv=None) -> dict:
                 else reg.default_registry())
     results_path = args.results or (SMOKE_RESULTS if args.smoke
                                     else DEFAULT_RESULTS)
+    dtype_name = precision.dtype_name(args.dtype)
+    word_bytes = (args.word_bytes if args.word_bytes is not None
+                  else precision.word_bytes(dtype_name))
 
     if args.smoke:
         clash = [f for f, v, d in (
             ("--stencil", args.stencil, None), ("--sizes", args.sizes, None),
             ("--grid", args.grid, None), ("--modes", args.modes, "fused"),
             ("--batches", args.batches, "1"), ("--steps", args.steps, 2),
+            ("--dtype", dtype_name, "f32"),
             ("--distributed", args.distributed, False)) if v != d]
         if clash:
             ap.error(f"--smoke runs a fixed lattice; drop {' '.join(clash)}")
-        points = _smoke_points(args.word_bytes)
+        points = _smoke_points(word_bytes)
         summary = run_sweep_points(points, registry=registry,
                                    results_path=results_path,
                                    resume=args.resume, reps=args.reps,
@@ -535,8 +576,8 @@ def main(argv=None) -> dict:
             batches=tuple(int(b) for b in args.batches.split(",")),
             n_steps=args.steps, reps=args.reps, warmup=args.warmup,
             results_path=results_path, resume=args.resume, tune=args.tune,
-            distributed=args.distributed, word_bytes=args.word_bytes,
-            registry=registry)
+            distributed=args.distributed, word_bytes=word_bytes,
+            registry=registry, dtype_name=dtype_name)
     if args.expect_cached and summary["n_measured"]:
         raise SystemExit(
             f"--expect-cached: {summary['n_measured']} point(s) were "

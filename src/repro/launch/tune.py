@@ -23,14 +23,15 @@ import argparse
 import time
 
 from repro import hw
-from repro.core import autotune, ir, registry as reg
+from repro.core import autotune, ir, precision, registry as reg
 from repro.core import stencils as st
 
 
 def tune_one(spec: st.StencilSpec, grid_shape, registry: reg.PlanRegistry, *,
-             word_bytes: int = 4, devices_x: int = 1, measured: bool = True,
-             max_evals: int = 12, reps: int = 3, n_steps: int = 4,
-             force: bool = False, batch: int = 1) -> dict:
+             word_bytes: int | None = None, devices_x: int = 1,
+             measured: bool = True, max_evals: int = 12, reps: int = 3,
+             n_steps: int = 4, force: bool = False, batch: int = 1,
+             dtype=None) -> dict:
     """Tune one (stencil, grid) problem registry-first; returns a report.
 
     On a registry hit (same key, same hardware fingerprint) no measurement
@@ -44,7 +45,15 @@ def tune_one(spec: st.StencilSpec, grid_shape, registry: reg.PlanRegistry, *,
     as ONE `ops.mwd_batched` call advancing `batch` problems and the winner
     persists under the ``b<batch>`` registry key, never colliding with the
     B=1 entry for the same problem.
+
+    `dtype` tunes the reduced-precision launch: candidates are measured on
+    problems generated at that stream dtype and the winner persists under
+    the matching ``w<word>`` registry key (word_bytes defaults to the
+    dtype's size, so ``dtype="bf16"`` lands in ``w2`` without collision
+    against the f32 ``w4`` plan for the same grid).
     """
+    if word_bytes is None:
+        word_bytes = precision.word_bytes(dtype)
     if not force:
         entry = registry.get(spec, grid_shape, word_bytes, devices_x, batch)
         if entry is not None and measured and entry.source != "measured":
@@ -59,7 +68,10 @@ def tune_one(spec: st.StencilSpec, grid_shape, registry: reg.PlanRegistry, *,
     if measured:
         scorer = autotune.measure_score(spec, grid_shape, word_bytes,
                                         n_steps=n_steps, reps=reps,
-                                        batch=batch)
+                                        batch=batch,
+                                        dtype=(precision.parse_dtype(dtype)
+                                               if dtype is not None
+                                               else None))
         res = autotune.autotune(spec, grid_shape, devices_x=devices_x,
                                 measure=scorer, word_bytes=word_bytes,
                                 max_evals=max_evals, d_w_cap=ny)
@@ -91,7 +103,13 @@ def main(argv=None) -> list[dict]:
                          "StencilOps via repro.core.ir.register)")
     ap.add_argument("--grid", type=str, default=None,
                     help="Z,Y,X grid (default: per-stencil sanity scale)")
-    ap.add_argument("--word-bytes", type=int, default=4)
+    ap.add_argument("--dtype", type=str, default=None,
+                    help="stream dtype to tune at (f32/bf16/fp16); the "
+                         "winner persists under the dtype's w<word> "
+                         "registry key")
+    ap.add_argument("--word-bytes", type=int, default=None,
+                    help="registry word-size key segment (default: derived "
+                         "from --dtype, 4 when neither given)")
     ap.add_argument("--devices-x", type=int, default=1)
     ap.add_argument("--batch", type=int, default=1,
                     help="tune the batched serving launch: measure ONE "
@@ -128,7 +146,8 @@ def main(argv=None) -> list[dict]:
         r = tune_one(spec, g, registry, word_bytes=args.word_bytes,
                      devices_x=args.devices_x, measured=not args.model_only,
                      max_evals=args.max_evals, reps=args.reps,
-                     n_steps=args.steps, force=args.force, batch=args.batch)
+                     n_steps=args.steps, force=args.force, batch=args.batch,
+                     dtype=args.dtype)
         p = r["plan"]
         print(f"{r['stencil']},{r['source']},"
               f"dw{p.d_w}.nf{p.n_f}.tg{p.tg_x}.{'fused' if p.fused else 'row'},"

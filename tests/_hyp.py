@@ -31,11 +31,18 @@ except ModuleNotFoundError:
 
     def given(*_a, **_k):
         def deco(fn):
-            def skipper():
+            import inspect
+
+            def skipper(*a, **k):
                 pytest.skip("hypothesis not installed")
 
             skipper.__name__ = fn.__name__
             skipper.__doc__ = fn.__doc__
+            # keep the params hypothesis would NOT supply visible to pytest,
+            # so @given composes with @pytest.mark.parametrize
+            sig = inspect.signature(fn)
+            keep = [p for n, p in sig.parameters.items() if n not in _k]
+            skipper.__signature__ = sig.replace(parameters=keep)
             return skipper
 
         return deco

@@ -1,0 +1,144 @@
+"""Direct unit tests for the int8 error-feedback compression primitives.
+
+`tests/test_distributed.py` exercises `compressed_pmean` and the compressed
+halo exchange end-to-end on 8 fake devices in a subprocess; these are the
+fast single-process tests of the same math — `jax.vmap(..., axis_name=...)`
+gives the collectives a real axis without any devices, and the slab
+quantizer is a pure function.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import precision
+from repro.distributed import compression, halo
+
+
+def _pmean(g, err):
+    """compressed_pmean over a size-N leading axis via vmap's named axis."""
+    return jax.vmap(lambda a, b: compression.compressed_pmean(a, b, "i"),
+                    axis_name="i")(g, err)
+
+
+# ---------------------------------------------------------------------------
+# compressed_pmean (the gradient path)
+# ---------------------------------------------------------------------------
+
+def test_exact_mean_for_constant_gradients():
+    """Equal grads on every member quantize to q=127 exactly -> exact mean."""
+    g = jnp.full((4, 8), 2.0)
+    out, err = _pmean(g, jnp.zeros_like(g))
+    np.testing.assert_allclose(np.asarray(out), 2.0, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(err), 0.0, atol=1e-7)
+
+
+def test_single_step_error_is_scale_bounded():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.standard_normal((4, 64)), jnp.float32)
+    out, err = _pmean(g, jnp.zeros_like(g))
+    amax = float(np.abs(np.asarray(g)).max())
+    true_mean = np.asarray(g).mean(axis=0)
+    # one quantization step errs at most half an int8 bucket per member
+    bucket = amax / 127.0
+    assert np.abs(np.asarray(out) - true_mean[None]).max() <= bucket
+    assert np.abs(np.asarray(err)).max() <= bucket / 2 + 1e-6
+
+
+def test_residual_telescopes_to_true_mean():
+    """Error feedback: the time-average of the quantized means converges."""
+    rng = np.random.default_rng(1)
+    g = jnp.asarray(rng.standard_normal((4, 64)), jnp.float32)
+    true_mean = np.asarray(g).mean(axis=0)
+    err = jnp.zeros_like(g)
+    acc = np.zeros(g.shape, np.float32)
+    for _ in range(20):
+        out, err = _pmean(g, err)
+        acc += np.asarray(out)
+    assert np.abs(acc / 20 - true_mean[None]).max() < 0.02
+
+
+def test_compressed_pmean_pytree():
+    tree = {"w": jnp.full((2, 4), 1.0), "b": jnp.full((2, 3), -3.0)}
+    err = compression.init_error_state(tree)
+    assert set(err) == {"w", "b"}
+    assert float(jnp.abs(err["w"]).max()) == 0.0
+    out, new_err = jax.vmap(
+        lambda t, e: compression.compressed_pmean(t, e, "i"),
+        axis_name="i")(tree, err)
+    assert set(out) == {"w", "b"}
+    np.testing.assert_allclose(np.asarray(out["w"]), 1.0, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(out["b"]), -3.0, rtol=1e-6)
+    assert new_err["b"].shape == (2, 3)
+
+
+def test_compression_ratio():
+    assert compression.compression_ratio() == 4.0
+    assert compression.compression_ratio(jnp.float32) == 4.0
+    assert compression.compression_ratio(jnp.bfloat16) == 2.0
+    assert compression.compression_ratio(jnp.float64) == 8.0
+
+
+# ---------------------------------------------------------------------------
+# quantize_slab / dequantize_slab (the halo path)
+# ---------------------------------------------------------------------------
+
+def test_quantize_slab_round_trip_bound():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((3, 4, 5)), jnp.float32)
+    q, scale, err = compression.quantize_slab(x)
+    assert q.dtype == jnp.int8
+    back = compression.dequantize_slab(q, scale, x.dtype)
+    assert back.dtype == x.dtype
+    bucket = float(np.abs(np.asarray(x)).max()) / 127.0
+    assert float(jnp.abs(back - x).max()) <= bucket / 2 + 1e-6
+    # the residual IS the round-trip error (error feedback invariant)
+    np.testing.assert_allclose(np.asarray(err),
+                               np.asarray(x - back), atol=1e-6)
+
+
+def test_quantize_slab_reduced_dtype_streams():
+    """bf16 slabs quantize via f32 feedback and dequantize back to bf16."""
+    bf16 = precision.parse_dtype("bf16")
+    x = jnp.asarray(np.linspace(-1, 1, 24, dtype=np.float32).reshape(2, 3, 4),
+                    bf16)
+    q, scale, err = compression.quantize_slab(x)
+    assert err.dtype == jnp.float32          # residual keeps full precision
+    back = compression.dequantize_slab(q, scale, x.dtype)
+    assert back.dtype == x.dtype
+    assert float(jnp.abs(back.astype(jnp.float32)
+                         - x.astype(jnp.float32)).max()) < 0.02
+
+
+def test_quantize_slab_error_feedback_telescopes():
+    """Repeated sends of the same slab: averaged reconstruction converges."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((4, 6)), jnp.float32)
+    err = None
+    acc = np.zeros(x.shape, np.float32)
+    n = 24
+    for _ in range(n):
+        q, scale, err = compression.quantize_slab(x, err)
+        acc += np.asarray(compression.dequantize_slab(q, scale, x.dtype))
+    assert np.abs(acc / n - np.asarray(x)).max() < 0.01
+
+
+def test_quantize_slab_zero_input():
+    x = jnp.zeros((2, 3))
+    q, scale, err = compression.quantize_slab(x)
+    assert float(jnp.abs(q).max()) == 0.0
+    assert float(scale) > 0.0                # clamped away from divide-by-zero
+    assert float(jnp.abs(err).max()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# wire accounting for the compressed halo mode
+# ---------------------------------------------------------------------------
+
+def test_halo_bytes_compression_wins():
+    shape, depth = (16, 16, 32), 2
+    full = halo.halo_bytes(shape, depth, 4, 2)
+    packed = halo.halo_bytes(shape, depth, 4, 2, compress=True)
+    # int8 payload + 4 shipped f32 scales per stream: > 3x wire reduction
+    assert packed < full / 3
+    assert packed > 0

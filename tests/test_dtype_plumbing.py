@@ -1,0 +1,125 @@
+"""Dtype plumbing at the system boundaries.
+
+The tentpole threads the stream dtype through every consumer surface; these
+tests pin the boundary behaviors that would silently collide or promote:
+
+* plan-registry ``w<word>`` keys: a bf16 (w2) plan and the f32 (w4) plan for
+  the same (op, grid) round-trip independently,
+* serving bucket keys separate dtypes (a reduced-precision tenant never
+  shares a ragged batch with an f32 tenant),
+* sweep point keys treat same-grid-different-dtype as distinct (resume
+  correctness), while f32 keys keep their historical shape,
+* `ops.mwd_batched` refuses a mixed-dtype batch unless told to cast.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import precision, registry as reg
+from repro.core import stencils as st
+from repro.core.mwd import MWDPlan
+from repro.kernels import ops
+from repro.launch import serve, sweep
+
+
+def test_registry_word_keys_round_trip(tmp_path):
+    r = reg.PlanRegistry(str(tmp_path / "plans.json"))
+    spec = st.SPECS["7pt-const"]
+    p4 = MWDPlan(d_w=8, n_f=2)
+    p2 = MWDPlan(d_w=4, n_f=1)
+    r.put(spec, (8, 8, 8), p4, 1.0, word_bytes=4)
+    r.put(spec, (8, 8, 8), p2, 2.0, word_bytes=2)
+    assert r.get(spec, (8, 8, 8), 4).plan == p4
+    assert r.get(spec, (8, 8, 8), 2).plan == p2
+    # the dtype-derived word (what tune --dtype bf16 persists under) lands
+    # on the w2 entry, never the f32 one
+    assert r.get(spec, (8, 8, 8), precision.word_bytes("bf16")).plan == p2
+    assert r.get(spec, (8, 8, 8), precision.word_bytes("f64")) is None
+
+
+def test_serve_bucket_keys_separate_dtypes():
+    spec = st.SPECS["7pt-const"]
+    s32, c32 = st.make_problem(spec, (6, 8, 8), seed=0)
+    sbf, cbf = st.make_problem(spec, (6, 8, 8),
+                               dtype=precision.parse_dtype("bf16"), seed=0)
+    k32 = serve.bucket_key(spec, s32, c32, 2)
+    kbf = serve.bucket_key(spec, sbf, cbf, 2)
+    assert k32 != kbf
+    # same shape + dtype from another tenant shares the bucket
+    s32b, c32b = st.make_problem(spec, (6, 8, 8), seed=3)
+    assert serve.bucket_key(spec, s32b, c32b, 2) == k32
+
+
+def test_sweep_point_keys_distinct_by_dtype():
+    spec = st.SPECS["7pt-const"]
+    k32 = sweep.point_key(spec, (6, 10, 8), 2, True, 1)
+    kbf = sweep.point_key(spec, (6, 10, 8), 2, True, 1, word_bytes=2,
+                          dtype_name="bf16")
+    kfp = sweep.point_key(spec, (6, 10, 8), 2, True, 1, word_bytes=2,
+                          dtype_name="fp16")
+    # f32 keys keep their historical shape (no dtype suffix): old result
+    # files resume cleanly
+    assert k32 == f"7pt-const@{spec.fingerprint}|6x10x8|s2|fused|b1|w4"
+    assert kbf.endswith("|w2|bf16")
+    # bf16 and fp16 share w2 but are different accuracy contracts
+    assert len({k32, kbf, kfp}) == 3
+
+    ps32 = sweep.PointSpec(spec, (6, 10, 8), 2, True, 1, 4)
+    psbf = sweep.PointSpec(spec, (6, 10, 8), 2, True, 1, 2,
+                           dtype_name="bf16")
+    assert ps32.key != psbf.key
+    # resume skips by key membership: an f32 result never marks the bf16
+    # point for the same grid as cached
+    done = {ps32.key: {"measured": True}}
+    assert psbf.key not in done
+
+
+def test_smoke_points_include_bf16_leg():
+    pts = sweep._smoke_points(4)
+    bf = [p for p in pts if p.dtype_name == "bf16"]
+    assert bf, "smoke sweep lost its reduced-precision leg"
+    assert {p.spec.name for p in bf} == set(st.SPECS)
+    assert all(p.word_bytes == precision.word_bytes("bf16") for p in bf)
+    assert all(p.fused and p.batch == 1 for p in bf)
+
+
+def test_mixed_dtype_batch_refused():
+    spec = st.SPECS["7pt-const"]
+    state_bf, coeffs_bf = st.make_problem(
+        spec, (6, 8, 8), dtype=precision.parse_dtype("bf16"), seed=0)
+    state_32 = tuple(x.astype(jnp.float32) for x in state_bf)
+    # shared (scalar) coefficients, so ONLY the member dtypes disagree
+    states = [state_32, state_bf]
+    coeffs = [coeffs_bf, coeffs_bf]
+    with pytest.raises(ValueError, match="mixed-dtype batch"):
+        ops.mwd_batched(spec, states, coeffs, 2, d_w=4, n_f=2)
+    # explicit dtype= casts the whole batch instead of refusing
+    cur, prev = ops.mwd_batched(spec, states, coeffs, 2, d_w=4, n_f=2,
+                                dtype="bf16")
+    assert cur.shape == (2, 6, 8, 8)
+    assert cur.dtype == precision.parse_dtype("bf16")
+
+
+def test_batched_reduced_matches_per_item():
+    """The batched bf16 launch is bitwise the per-item bf16 launches."""
+    spec = st.SPECS["7pt-const"]
+    probs = [st.make_problem(spec, (6, 8, 8), seed=s) for s in (0, 1)]
+    states = [p[0] for p in probs]
+    coeffs = [p[1] for p in probs]
+    cur, prev = ops.mwd_batched(spec, states, coeffs, 2, d_w=4, n_f=2,
+                                dtype="bf16")
+    for b in range(2):
+        one = ops.mwd(spec, states[b], coeffs[b], 2, d_w=4, n_f=2,
+                      dtype="bf16")
+        np.testing.assert_array_equal(
+            np.asarray(cur[b], np.float32), np.asarray(one[0], np.float32))
+
+
+def test_make_problem_dtype():
+    spec = st.SPECS["7pt-var"]
+    (cur, prev), coeffs = st.make_problem(
+        spec, (6, 8, 8), dtype=precision.parse_dtype("fp16"), seed=0)
+    assert cur.dtype == jnp.float16 and prev.dtype == jnp.float16
+    (cur32, _), _ = st.make_problem(spec, (6, 8, 8), seed=0)
+    assert cur32.dtype == jnp.float32
