@@ -69,6 +69,8 @@ def _grid_str(p: dict) -> str:
 
 def _plan_str(p: dict) -> str:
     pl = p["plan"]
+    if pl is None:          # jnp-path points (the scaling legs) have no plan
+        return "jnp"
     return f"dw{pl['d_w']}.nf{pl['n_f']}" + ("" if pl["fused"] else ".row")
 
 
@@ -204,6 +206,131 @@ def distributed_table(pts: list[dict]) -> str:
     return "\n".join(rows)
 
 
+# --- scaling study tables (sweep --scaling legs)
+
+def _scaling_legs(pts: list[dict]) -> dict[tuple, dict]:
+    """(stencil, regime, n_devices) -> {"sync": point, "overlap": point}."""
+    legs: dict[tuple, dict] = {}
+    for p in pts:
+        m = p["measured"]
+        ident = (p["stencil"], m["scaling"], m["n_devices"])
+        legs.setdefault(ident, {})["overlap" if m.get("overlap")
+                                   else "sync"] = p
+    return legs
+
+
+def _paired_ratio(sides: dict) -> float | None:
+    """Overlapped/sync speed ratio, drift-free when paired timing exists."""
+    if "overlap" not in sides or "sync" not in sides:
+        return None
+    om = sides["overlap"]["measured"]
+    if om.get("paired_sync_t_s"):
+        return om["paired_sync_t_s"] / om["t_s"]
+    return om["glups"] / sides["sync"]["measured"]["glups"]
+
+
+def _best_sync_t(sides: dict) -> float | None:
+    """Fastest credible synchronous-leg seconds for one ladder rung.
+
+    The sync program is timed twice — standalone, and again inside the
+    overlapped point's interleaved session (``paired_sync_t_s``). On a
+    contended host either session can land entirely on a slow patch, so
+    throughput/efficiency/calibration consumers take the min of the two
+    (noise is one-sided positive; see `autotune.time_callable`).
+    """
+    ts = []
+    if "sync" in sides:
+        ts.append(sides["sync"]["measured"]["t_s"])
+    om = sides.get("overlap", {}).get("measured", {})
+    if om.get("paired_sync_t_s"):
+        ts.append(om["paired_sync_t_s"])
+    return min(ts) if ts else None
+
+
+def _sync_glups(sides: dict) -> float | None:
+    """Synchronous-leg GLUP/s at the `_best_sync_t` measurement."""
+    t = _best_sync_t(sides)
+    if t is None or "sync" not in sides:
+        return None
+    sm = sides["sync"]["measured"]
+    return sm["glups"] * sm["t_s"] / t
+
+
+def scaling_table(pts: list[dict]) -> str:
+    """Strong/weak ladder: sync vs overlapped throughput per mesh size.
+
+    ``ovl/sync`` is the gate's ratio (paired interleaved timing when the
+    sweep recorded it); ``par eff`` is the synchronous leg's parallel
+    efficiency vs the 1-device rung of the same (stencil, regime) ladder,
+    GLUP/s(n) / (n * GLUP/s(1)).
+    """
+    legs = _scaling_legs(pts)
+    base = {(st, reg): _sync_glups(sides)
+            for (st, reg, n), sides in legs.items() if n == 1}
+    rows = ["| stencil | regime | grid | devices | sync GLUP/s "
+            "| overlap GLUP/s | ovl/sync | par eff |",
+            "|---|---|---|---|---|---|---|---|"]
+    for (st, reg, n), sides in sorted(legs.items()):
+        syn = _sync_glups(sides)
+        if syn is None:
+            continue
+        ovl = (f"{sides['overlap']['measured']['glups']:.5f}"
+               if "overlap" in sides else "-")
+        ratio = _paired_ratio(sides)
+        ratio_s = f"{ratio:.3f}" if ratio is not None else "-"
+        b = base.get((st, reg))
+        eff = f"{syn / (n * b):.0%}" if b else "-"
+        rows.append(
+            f"| {st} | {reg} | {_grid_str(sides['sync'])} | {n} "
+            f"| {syn:.5f} | {ovl} | {ratio_s} | {eff} |")
+    return "\n".join(rows)
+
+
+def overlap_model_table(pts: list[dict]) -> str:
+    """`models.super_step_time` vs the measured overlapped super-step.
+
+    Per (stencil, regime) ladder: the per-cell sweep cost ``t_cell`` is
+    calibrated from the 1-device synchronous rung (whole-launch seconds /
+    super-steps / swept cells — no exchange on the wire there), the
+    per-rung exchange time is inferred from that rung's synchronous leg
+    (measured sync super-step minus its swept-cell cost), and the
+    overlapped super-step is predicted as
+    ``max(t_interior, t_exchange) + t_boundary``. The residual column is
+    (predicted - measured) / measured of the overlapped super-step.
+    """
+    legs = _scaling_legs(pts)
+    t_cell = {}
+    for (st, reg, n), sides in legs.items():
+        t = _best_sync_t(sides)
+        if n == 1 and t is not None and "sync" in sides:
+            m = sides["sync"]["measured"]
+            t_super = t / m["n_super_steps"]
+            t_cell[(st, reg)] = t_super / (m["overlap_work"]["sync_cells"]
+                                           * m["t_block"])
+    rows = ["| stencil | regime | devices | t_exch ms | interior ms "
+            "| boundary ms | predicted ovl ms | measured ovl ms "
+            "| residual |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for (st, reg, n), sides in sorted(legs.items()):
+        tc = t_cell.get((st, reg))
+        if tc is None or "overlap" not in sides or "sync" not in sides:
+            continue
+        om, sm = sides["overlap"]["measured"], sides["sync"]["measured"]
+        w = om["overlap_work"]
+        t_int = w["interior_cells"] * om["t_block"] * tc
+        t_bnd = w["boundary_cells"] * om["t_block"] * tc
+        t_sync_super = _best_sync_t(sides) / sm["n_super_steps"]
+        t_exch = max(0.0, t_sync_super
+                     - w["sync_cells"] * sm["t_block"] * tc)
+        pred = models.super_step_time(t_int, t_bnd, t_exch, overlap=True)
+        meas = om["t_s"] / om["n_super_steps"]
+        rows.append(
+            f"| {st} | {reg} | {n} | {t_exch * 1e3:.3f} "
+            f"| {t_int * 1e3:.3f} | {t_bnd * 1e3:.3f} | {pred * 1e3:.3f} "
+            f"| {meas * 1e3:.3f} | {(pred - meas) / meas:+.0%} |")
+    return "\n".join(rows)
+
+
 # --- multi-pod dry-run tables (folded from the retired benchmarks/report.py)
 
 def _fmt_bytes(b) -> str:
@@ -292,7 +419,9 @@ def render(results_dir: str = DEFAULT_RESULTS_DIR) -> str:
     sweeps = load_sweeps(results_dir)
     pts = _sorted_points(sweeps["points"])
     launch_pts = [p for p in pts if not p.get("distributed")]
-    dist_pts = [p for p in pts if p.get("distributed")]
+    all_dist = [p for p in pts if p.get("distributed")]
+    scaling_pts = [p for p in all_dist if p["measured"].get("scaling")]
+    dist_pts = [p for p in all_dist if not p["measured"].get("scaling")]
 
     calib = None
     residuals = None
@@ -324,7 +453,7 @@ def render(results_dir: str = DEFAULT_RESULTS_DIR) -> str:
     out.append("")
     out.append(f"- results files: {', '.join(sweeps['files']) or '(none)'}")
     out.append(f"- sweep points: {len(launch_pts)} single-launch + "
-               f"{len(dist_pts)} distributed")
+               f"{len(dist_pts)} distributed + {len(scaling_pts)} scaling")
     out.append("- hardware fingerprints: "
                + (", ".join(f"`{f}`" for f in sweeps["fingerprints"])
                   or "(none)"))
@@ -445,6 +574,51 @@ def render(results_dir: str = DEFAULT_RESULTS_DIR) -> str:
                    "shard's extended block.")
         out.append("")
         out.append(distributed_table(dist_pts))
+        out.append("")
+
+    if scaling_pts:
+        out.append("## 5b. Strong/weak scaling: overlapped vs synchronous "
+                   "super-steps")
+        out.append("")
+        out.append("`python -m repro.launch.sweep --scaling` walks the mesh "
+                   "ladder 1 -> 2 -> 4 -> 8 devices")
+        out.append("twice per stencil: STRONG (fixed global grid, shards "
+                   "shrink) and WEAK (fixed per-device")
+        out.append("block, grid grows with the mesh). Every rung is timed "
+                   "both synchronously (exchange on")
+        out.append("the critical path) and overlapped (interior advance "
+                   "concurrent with the ppermute);")
+        out.append("`ovl/sync` is the interleaved paired-timing speed ratio "
+                   "the CI gate (`benchmarks.")
+        out.append("scaling_gate`) enforces on the largest mesh; the sync "
+                   "column takes the faster of the")
+        out.append("standalone and paired-session measurements. The "
+                   "committed numbers come from CPU")
+        out.append("devices time-slicing one host core, so parallel "
+                   "efficiency decays with mesh size by")
+        out.append("construction — the ladder exercises the machinery; the "
+                   "ratios, not the absolute")
+        out.append("GLUP/s, are the portable signal.")
+        out.append("")
+        out.append(scaling_table(scaling_pts))
+        out.append("")
+        out.append("### Overlap-model residuals (Sec. 4.2 analog)")
+        out.append("")
+        out.append("`repro.core.models.super_step_time` predicts the "
+                   "overlapped super-step as")
+        out.append("`max(t_interior, t_exchange) + t_boundary`. Per-cell "
+                   "sweep cost is calibrated from the")
+        out.append("1-device synchronous rung of each ladder; "
+                   "`t_exchange` is inferred per rung from its")
+        out.append("synchronous leg. On the committed single-core host the "
+                   "inferred exchange term also")
+        out.append("absorbs the serialized compute of the other ranks, so "
+                   "the predicted hidden-exchange")
+        out.append("win is an upper bound the host cannot realize — the "
+                   "residual column quantifies that")
+        out.append("gap (negative = model optimistic).")
+        out.append("")
+        out.append(overlap_model_table(scaling_pts))
         out.append("")
 
     dryrun_path = os.path.join(results_dir, "dryrun.json")

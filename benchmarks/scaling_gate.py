@@ -1,0 +1,120 @@
+"""CI gate: overlapped super-steps must not be slower than synchronous.
+
+Consumes the strong/weak scaling results written by
+``python -m repro.launch.sweep --scaling`` and pairs every overlapped leg
+with the synchronous leg of the same (stencil, grid, devices, regime).
+Both legs run the identical zone-split super-step — same swept cells, same
+exchanged bytes — differing only in whether the interior advance waits on
+the ppermute, so the pair ratio isolates the scheduling win the paper's
+Sec. 4.2 overlap argues for.
+
+The gate enforces the MAX-device rungs (that is where communication sits on
+the synchronous critical path; at 1 device the schedules are degenerate and
+the ratio is pure timer noise): the geometric mean of their
+overlapped/synchronous throughput ratios must reach ``--min-ratio``
+(default 1.0), and every individual max-device pair must clear
+``--min-pair-ratio`` (default 0.9, a noise floor, not a target).
+
+  python -m benchmarks.scaling_gate --results /tmp/ci/sweep-scaling.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+
+
+def load_points(path: str) -> dict:
+    with open(path) as f:
+        raw = json.load(f)
+    return raw.get("points", {})
+
+
+def scaling_pairs(points: dict) -> list[dict]:
+    """Overlap/sync throughput pairs keyed by (stencil, grid, n, regime).
+
+    The ratio prefers the overlapped point's interleaved paired sync time
+    (``measured["paired_sync_t_s"]``, see `autotune.time_callable_paired`)
+    — both programs timed in one session, so host drift between separately
+    measured points cannot fake a win or a loss. Standalone sync points
+    still supply the table's absolute sync throughput and serve as the
+    ratio fallback for older results files.
+    """
+    legs: dict[tuple, dict] = {}
+    for p in points.values():
+        m = p.get("measured", {})
+        if not p.get("distributed") or not m.get("scaling"):
+            continue
+        ident = (p["stencil"], tuple(p["grid"]), m["n_devices"],
+                 m["scaling"])
+        legs.setdefault(ident, {})["overlap" if m.get("overlap")
+                                   else "sync"] = p
+    pairs = []
+    for (stencil, grid, n, regime), sides in sorted(legs.items()):
+        if "overlap" not in sides or "sync" not in sides:
+            continue
+        om = sides["overlap"]["measured"]
+        ovl = om["glups"]
+        syn = sides["sync"]["measured"]["glups"]
+        if om.get("paired_sync_t_s"):
+            ratio = om["paired_sync_t_s"] / om["t_s"]
+        else:
+            ratio = ovl / syn
+        pairs.append({"stencil": stencil, "grid": grid, "n_devices": n,
+                      "scaling": regime, "overlap_glups": ovl,
+                      "sync_glups": syn, "ratio": ratio})
+    return pairs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.scaling_gate",
+        description="Gate overlapped >= synchronous steady-state throughput "
+                    "on the scaling sweep's largest mesh")
+    ap.add_argument("--results", required=True,
+                    help="sweep-scaling.json written by "
+                         "`repro.launch.sweep --scaling`")
+    ap.add_argument("--min-ratio", type=float, default=1.0,
+                    help="geometric-mean overlapped/sync throughput ratio "
+                         "the max-device pairs must reach (default 1.0)")
+    ap.add_argument("--min-pair-ratio", type=float, default=0.9,
+                    help="floor for every individual max-device pair "
+                         "(catches one pathological config hiding in the "
+                         "mean; default 0.9)")
+    args = ap.parse_args(argv)
+
+    pairs = scaling_pairs(load_points(args.results))
+    if not pairs:
+        print(f"scaling gate: no overlap/sync pairs in {args.results}")
+        return 1
+    n_max = max(p["n_devices"] for p in pairs)
+    gated = [p for p in pairs if p["n_devices"] == n_max]
+
+    for p in pairs:
+        mark = "*" if p["n_devices"] == n_max else " "
+        print(f"{mark} {p['stencil']:12s} "
+              f"{'x'.join(map(str, p['grid'])):>12s} d{p['n_devices']} "
+              f"{p['scaling']:6s} overlap {p['overlap_glups']:.5f} "
+              f"sync {p['sync_glups']:.5f} GLUP/s ratio {p['ratio']:.3f}")
+
+    gmean = math.exp(sum(math.log(p["ratio"]) for p in gated) / len(gated))
+    worst = min(gated, key=lambda p: p["ratio"])
+    print(f"gate: {len(gated)} pairs at d{n_max}, geomean ratio "
+          f"{gmean:.3f} (need >= {args.min_ratio}), worst "
+          f"{worst['ratio']:.3f} (need >= {args.min_pair_ratio})")
+    if gmean < args.min_ratio:
+        print(f"FAIL: overlapped geomean {gmean:.3f} < {args.min_ratio} — "
+              "the async schedule lost throughput vs the synchronous "
+              "baseline")
+        return 1
+    if worst["ratio"] < args.min_pair_ratio:
+        print(f"FAIL: pair {worst['stencil']} {worst['scaling']} ratio "
+              f"{worst['ratio']:.3f} < {args.min_pair_ratio}")
+        return 1
+    print("scaling gate OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -25,9 +25,12 @@ def main():
     T1, T2 = 4, 4
     state, coeffs = st.make_problem(spec, shape, seed=11)
 
-    # phase 1: healthy 2x2x2 mesh (2 pods)
+    # phase 1: healthy 2x2x2 mesh (2 pods); overlap="auto" runs the
+    # interior/boundary-split schedule (bitwise-equal to synchronous) where
+    # the shards have room, and falls back to synchronous where not
     mesh = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
-    out = stepper.run_distributed(spec, mesh, state, coeffs, T1, t_block=2)
+    out = stepper.run_distributed(spec, mesh, state, coeffs, T1, t_block=2,
+                                  overlap="auto")
     ckpt_dir = "/tmp/dist_stencil_ckpt"
     checkpoint.save(ckpt_dir, T1, {"cur": out[0], "prev": out[1]})
     print(f"phase 1: {T1} steps on {mesh.devices.size} devices, checkpointed")

@@ -86,21 +86,26 @@ def model_score(spec: StencilSpec, grid_shape, word_bytes: int = 4,
 
 
 def time_callable(launch: Callable[[], object], *, reps: int = 3,
-                  warmup: int = 1) -> float:
-    """Median wall-clock seconds of `launch` over `reps` timed calls.
+                  warmup: int = 1, stat: str = "median") -> float:
+    """Wall-clock seconds of `launch` over `reps` timed calls.
 
     THE timing policy of the repo — `warmup` untimed calls (compilation),
-    then the median of `reps` `perf_counter` intervals. `launch` must block
-    until its device work completes (`jax.block_until_ready` inside).
-    Everything that reports a measured time (`measure_score`, the sweep
-    harness's single-launch and distributed legs) goes through here, so a
-    change of policy (median -> min, outlier rejection) lands everywhere
-    at once.
+    then the `stat` ("median", the default, or "min") of `reps`
+    `perf_counter` intervals. `launch` must block until its device work
+    completes (`jax.block_until_ready` inside). Everything that reports a
+    measured time (`measure_score`, the sweep harness's single-launch and
+    distributed legs) goes through here, so a change of policy lands
+    everywhere at once. "min" is for RATIO consumers (the scaling gate
+    pairs adjacent measurements): scheduler noise on a contended host is
+    one-sided positive, so min-of-reps tracks the true cost of each leg
+    far more reproducibly than the median.
     """
     import time as _time
 
     import numpy as np
 
+    if stat not in ("median", "min"):
+        raise ValueError(f"stat must be 'median' or 'min', got {stat!r}")
     for _ in range(warmup):
         launch()
     times = []
@@ -108,7 +113,36 @@ def time_callable(launch: Callable[[], object], *, reps: int = 3,
         t0 = _time.perf_counter()
         launch()
         times.append(_time.perf_counter() - t0)
-    return float(np.median(times))
+    return float(np.min(times) if stat == "min" else np.median(times))
+
+
+def time_callable_paired(launch_a: Callable[[], object],
+                         launch_b: Callable[[], object], *, reps: int = 7,
+                         warmup: int = 2) -> tuple[float, float]:
+    """Min-of-reps times of two launches sampled in ABAB interleave.
+
+    For ratio consumers (the scaling gate compares overlapped vs
+    synchronous super-steps): timing the two programs in separate
+    sessions lets slow host drift between the sessions swamp a
+    near-zero true difference, so both are warmed first and then the
+    timed reps alternate a/b within the SAME session — drift hits both
+    sides equally and the per-side min cancels one-sided scheduler
+    noise. Returns ``(t_a, t_b)`` seconds.
+    """
+    import time as _time
+
+    for _ in range(warmup):
+        launch_a()
+        launch_b()
+    t_a, t_b = [], []
+    for _ in range(reps):
+        t0 = _time.perf_counter()
+        launch_a()
+        t_a.append(_time.perf_counter() - t0)
+        t0 = _time.perf_counter()
+        launch_b()
+        t_b.append(_time.perf_counter() - t0)
+    return float(min(t_a)), float(min(t_b))
 
 
 def time_mwd_launch(spec: StencilSpec, states, coeffs, n_steps: int,

@@ -178,6 +178,31 @@ def ghostzone_redundancy(radius: int, t_b: int, block_y: int, block_z: int) -> f
     return total / (t_b * block_y * block_z)
 
 
+def super_step_time(t_interior_s: float, t_boundary_s: float,
+                    t_exchange_s: float, *, overlap: bool) -> float:
+    """Predicted wall time of ONE distributed super-step (Sec. 4.2 analog).
+
+    Both schedules run the same interior/boundary zone split (the swept-cell
+    counts come from `stepper.overlap_work`); they differ only in where the
+    halo exchange sits in the dataflow:
+
+      synchronous: the exchange is a barrier before any dependent compute,
+        so the terms serialize -> t_exchange + t_interior + t_boundary.
+
+      overlapped: the interior advance is dataflow-independent of the
+        ppermute pairs, so it proceeds concurrently with the exchange and
+        only the boundary-zone completion waits on the landed halos
+        -> max(t_interior, t_exchange) + t_boundary.
+
+    The overlapped win saturates at min(t_interior, t_exchange) — exchange
+    fully hidden when the interior is the bigger term, which is the
+    memory-starved regime the paper targets.
+    """
+    if overlap:
+        return max(t_interior_s, t_exchange_s) + t_boundary_s
+    return t_exchange_s + t_interior_s + t_boundary_s
+
+
 # ---------------------------------------------------------------------------
 # ECM-TPU model
 # ---------------------------------------------------------------------------

@@ -30,12 +30,13 @@ def _edge_clamp(block, depth: int, axis: int, lo: bool):
     return jnp.tile(edge, reps)
 
 
-def exchange_axis(block, axis_name: str, axis: int, depth: int):
-    """Return block extended by `depth` halo slabs on both sides of `axis`.
+def exchange_axis_parts(block, axis_name: str, axis: int, depth: int):
+    """The two halo slabs of `exchange_axis`, NOT yet concatenated.
 
-    Neighbors communicate via ppermute (ring); the global-edge ranks replace
-    the wrapped halo with an edge clamp (the Dirichlet frame makes the actual
-    values irrelevant — interior updates only ever read true frame cells).
+    Exposed so the zone-split super-step can assemble the extended block
+    around a shared, collective-free core (`stepper._exchange_state_shared`)
+    instead of re-padding the local block for the interior pass.
+    Returns (lo_halo, hi_halo), each `depth` thick along `axis`.
     """
     if depth > block.shape[axis]:
         raise ValueError(
@@ -43,17 +44,15 @@ def exchange_axis(block, axis_name: str, axis: int, depth: int):
             f"{block.shape[axis]} on axis {axis}: lower t_block or use a "
             f"coarser decomposition (single-hop exchange only)")
     n = _axis_size(axis_name)
+    if n == 1:
+        return (_edge_clamp(block, depth, axis, lo=True),
+                _edge_clamp(block, depth, axis, lo=False))
     i = jax.lax.axis_index(axis_name)
     ndim = block.ndim
     lo_idx = [slice(None)] * ndim
     hi_idx = [slice(None)] * ndim
     lo_idx[axis] = slice(0, depth)
     hi_idx[axis] = slice(block.shape[axis] - depth, block.shape[axis])
-    if n == 1:
-        lo_halo = _edge_clamp(block, depth, axis, lo=True)
-        hi_halo = _edge_clamp(block, depth, axis, lo=False)
-        return jnp.concatenate([lo_halo, block, hi_halo], axis=axis)
-
     fwd = [(r, (r + 1) % n) for r in range(n)]
     bwd = [(r, (r - 1) % n) for r in range(n)]
     # halo arriving at my low side = neighbor (i-1)'s high slab
@@ -62,6 +61,17 @@ def exchange_axis(block, axis_name: str, axis: int, depth: int):
     lo_halo = jnp.where(i == 0, _edge_clamp(block, depth, axis, True), lo_halo)
     hi_halo = jnp.where(i == n - 1, _edge_clamp(block, depth, axis, False),
                         hi_halo)
+    return lo_halo, hi_halo
+
+
+def exchange_axis(block, axis_name: str, axis: int, depth: int):
+    """Return block extended by `depth` halo slabs on both sides of `axis`.
+
+    Neighbors communicate via ppermute (ring); the global-edge ranks replace
+    the wrapped halo with an edge clamp (the Dirichlet frame makes the actual
+    values irrelevant — interior updates only ever read true frame cells).
+    """
+    lo_halo, hi_halo = exchange_axis_parts(block, axis_name, axis, depth)
     return jnp.concatenate([lo_halo, block, hi_halo], axis=axis)
 
 

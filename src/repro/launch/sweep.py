@@ -56,6 +56,7 @@ from repro.core.mwd import MWDPlan
 SCHEMA_VERSION = 1
 DEFAULT_RESULTS = os.path.join("results", "sweep.json")
 SMOKE_RESULTS = os.path.join("results", "sweep-smoke.json")
+SCALING_RESULTS = os.path.join("results", "sweep-scaling.json")
 
 # CI-scale smoke ladder (interpret mode pays Python per cell, so these are
 # deliberately tiny N^3 cubes; pass --sizes/--grid for production scales).
@@ -66,7 +67,8 @@ SMOKE_SIZES = {1: (8, 12), 4: (16, 20)}
 
 def point_key(spec: st.StencilSpec, grid_shape, n_steps: int, fused: bool,
               batch: int, word_bytes: int = 4, distributed: bool = False,
-              dtype_name: str = "f32") -> str:
+              dtype_name: str = "f32", n_devices: int | None = None,
+              overlap: bool = False, scaling: str | None = None) -> str:
     """Stable identity of one sweep point (resume skips existing keys).
 
     Embeds the operator's structural IR fingerprint (same convention as the
@@ -75,15 +77,24 @@ def point_key(spec: st.StencilSpec, grid_shape, n_steps: int, fused: bool,
     distributed super-stepper leg from the single-launch point on the same
     problem, and a non-f32 stream dtype appends its short name (``|bf16``)
     so a same-grid-different-dtype point is a distinct key even at an equal
-    word size (bf16 vs fp16 are both w2 but different contracts). The
-    hardware fingerprint is NOT part of the key — it is stored on the
-    point, and resume treats a fingerprint mismatch as a miss.
+    word size (bf16 vs fp16 are both w2 but different contracts). A scaling
+    leg extends the ``|dist`` suffix with its pinned device count, schedule
+    and scaling regime (``|dist|d4|ovl|strong``) — the legacy whole-machine
+    distributed point's key is unchanged. The hardware fingerprint is NOT
+    part of the key — it is stored on the point, and resume treats a
+    fingerprint mismatch as a miss.
     """
     nz, ny, nx = grid_shape
     key = (f"{spec.name}@{spec.fingerprint}|{nz}x{ny}x{nx}|s{n_steps}"
            f"|{'fused' if fused else 'row'}|b{batch}|w{word_bytes}")
     if distributed:
         key += "|dist"
+        if n_devices is not None:
+            key += f"|d{n_devices}"
+        if overlap:
+            key += "|ovl"
+        if scaling:
+            key += f"|{scaling}"
     if dtype_name != "f32":
         key += f"|{dtype_name}"
     return key
@@ -96,7 +107,15 @@ def ladder(sizes) -> list[tuple[int, int, int]]:
 
 @dataclasses.dataclass(frozen=True)
 class PointSpec:
-    """One cell of the sweep lattice, before any measurement."""
+    """One cell of the sweep lattice, before any measurement.
+
+    `n_devices`/`overlap`/`scaling` describe the distributed scaling legs:
+    a pinned mesh size (instead of the whole local machine), the overlapped
+    vs synchronous super-step schedule, and whether the leg belongs to the
+    strong- (fixed global grid) or weak- (fixed per-shard grid) scaling
+    ladder. Scaling legs run the jnp super-step path (no MWD plan), so the
+    sync/overlap pair differs ONLY in schedule.
+    """
 
     spec: st.StencilSpec
     grid: tuple[int, int, int]
@@ -106,13 +125,17 @@ class PointSpec:
     word_bytes: int
     distributed: bool = False
     dtype_name: str = "f32"
+    n_devices: int | None = None
+    overlap: bool = False
+    scaling: str | None = None
 
     @property
     def key(self) -> str:
         """The point's identity under `point_key`."""
         return point_key(self.spec, self.grid, self.n_steps, self.fused,
                          self.batch, self.word_bytes, self.distributed,
-                         self.dtype_name)
+                         self.dtype_name, self.n_devices, self.overlap,
+                         self.scaling)
 
 
 def model_point(spec: st.StencilSpec, grid, n_steps: int, plan: MWDPlan,
@@ -200,6 +223,51 @@ def _distributed_model(ps: PointSpec, plan: MWDPlan, measured: dict) -> dict:
     }
 
 
+def _scaling_model(ps: PointSpec, measured: dict) -> dict:
+    """Model columns of a jnp-path scaling leg, coherent with its schedule.
+
+    The zone-split jnp super-step sweeps interior + boundary cells per
+    device per super-step (`stepper.overlap_work` — both schedules sweep
+    the same cells; only the exchange dependency differs), each swept cell
+    streaming the operator's reads and one write through HBM. The model
+    t_s here is the a-priori v5e roofline of that work; the overlap-model
+    residuals in the report are instead computed by the renderer from the
+    recorded cell/halo columns, calibrated against the measured sync legs
+    (`models.super_step_time`).
+    """
+    import numpy as np
+
+    w = measured["overlap_work"]
+    n_super, n_dev = measured["n_super_steps"], measured["n_devices"]
+    cells_dev = w["interior_cells"] + w["boundary_cells"]
+    lups = float(np.prod(ps.grid)) * n_super * measured["t_block"]
+    flops = ps.spec.flops_per_lup * cells_dev * n_super * n_dev
+    hbm_bytes = ((ps.spec.n_streams + 1) * ps.word_bytes
+                 * cells_dev * n_super * n_dev)
+    chip = hw.V5E
+    t_model = n_super * max(
+        ps.spec.flops_per_lup * cells_dev / chip.peak_flops_vpu_f32,
+        (ps.spec.n_streams + 1) * ps.word_bytes * cells_dev / chip.hbm_bw)
+    energy = models.energy(flops, hbm_bytes, t_model)
+    return {
+        "lups": lups,
+        "flops": flops,
+        "traffic": {"hbm_bytes": hbm_bytes,
+                    "b_per_lup": hbm_bytes / lups,
+                    "launches": n_super},
+        "model": {
+            "bc_eq5": models.spatial_code_balance(ps.spec, ps.word_bytes),
+            "bc_spatial": models.spatial_code_balance(ps.spec,
+                                                      ps.word_bytes),
+            "t_s": t_model,
+            "glups": lups / t_model / 1e9,
+            "energy_j": {"core": energy.core_j, "hbm": energy.hbm_j,
+                         "static": energy.static_j,
+                         "total": energy.total_j},
+        },
+    }
+
+
 def measure_point(ps: PointSpec, plan: MWDPlan, *, reps: int = 2,
                   warmup: int = 1, seed: int = 0) -> dict:
     """Wall-clock one sweep point: median seconds + GLUP/s of the launch."""
@@ -218,56 +286,111 @@ def measure_point(ps: PointSpec, plan: MWDPlan, *, reps: int = 2,
 def measure_distributed_point(ps: PointSpec, registry: reg.PlanRegistry, *,
                               t_block: int = 2, reps: int = 2,
                               warmup: int = 1,
-                              seed: int = 0) -> tuple[dict, MWDPlan, str]:
+                              seed: int = 0) -> tuple[dict, MWDPlan | None,
+                                                      str]:
     """Time the deep-halo super-stepper leg of one (stencil, grid) point.
 
-    Builds the local mesh (`repro.distributed.elastic.build_mesh`), resolves
-    the plan from `registry` against the PER-SHARD extended block (the same
-    resolution `stepper.run_distributed(plan="auto")` performs), compiles
-    the fused super-step once, and times ``ceil(n_steps / t_block)``
+    Builds the local mesh (`repro.distributed.elastic.build_mesh`, sized by
+    ``ps.n_devices`` when the point pins one), hoists the time-invariant
+    coefficient exchange out of the timed loop (`make_coeff_extender` —
+    coefficients cross the wire exactly once, same as `run_distributed`),
+    compiles the super-step once, and times ``ceil(n_steps / t_block)``
     super-step launches back to back under the shared
     `autotune.time_callable` policy — the steady-state serving cost, with
-    compilation excluded by the warmup. Returns ``(measured, plan, source)``.
+    compilation excluded by the warmup.
+
+    A legacy distributed point resolves its MWD plan from `registry`
+    against the PER-SHARD extended block (the same resolution
+    `stepper.run_distributed(plan="auto")` performs); a scaling leg
+    (``ps.scaling``) runs the jnp super-step path instead and records the
+    swept-cell split (`stepper.overlap_work`) plus the per-super-step halo
+    bytes the overlap model consumes. Returns ``(measured, plan, source)``
+    — plan is None on the jnp path.
     """
     import jax
     import numpy as np
 
-    from repro.distributed import elastic, stepper
+    from repro.distributed import elastic, halo, stepper
 
-    mesh = elastic.build_mesh()
+    mesh = elastic.build_mesh(ps.n_devices)
+    if ps.scaling:
+        # the gate compares overlap/sync pairs of adjacent points; a median
+        # of few reps is too jittery for a ratio threshold on a contended
+        # host, so scaling legs take extra samples, a second warmup launch,
+        # and the min-of-reps statistic (see autotune.time_callable)
+        reps, warmup = max(reps, 7), max(warmup, 2)
     state, coeffs = st.make_problem(ps.spec, ps.grid,
                                     dtype=precision.parse_dtype(
                                         ps.dtype_name), seed=seed)
     cur, prev = state
     gs = stepper.GridSharding(mesh)
     shape_e = stepper.local_extended_shape(ps.spec, mesh, ps.grid, t_block)
-    plan, source = registry.resolve(ps.spec, shape_e,
-                                    word_bytes=cur.dtype.itemsize)
-    plan = stepper.cap_plan_d_w(ps.spec, plan, shape_e[1])
+    if ps.scaling:
+        plan, source, scalars = None, "none-jnp", None
+    else:
+        plan, source = registry.resolve(ps.spec, shape_e,
+                                        word_bytes=cur.dtype.itemsize)
+        plan = stepper.cap_plan_d_w(ps.spec, plan, shape_e[1])
     prev = jax.device_put(prev if ps.spec.time_order == 2 else cur,
                           gs.sharding())
     cur = jax.device_put(cur, gs.sharding())
     arrays, svec = stepper.canonical_coeffs(ps.spec, coeffs, ps.grid,
                                             cur.dtype)
-    scalars = tuple(float(x) for x in svec)
+    if plan is not None:
+        scalars = tuple(float(x) for x in svec)
     if ps.spec.n_coeff_arrays:
         arrays = jax.device_put(arrays, gs.sharding(leading=1))
+    # one-time coefficient exchange OUTSIDE the timed loop: the timed
+    # super-steps ppermute only the solution state
+    coeffs_h = stepper.make_coeff_extender(ps.spec, mesh, t_block)(
+        (arrays, svec))
     step = stepper.make_super_step(ps.spec, mesh, ps.grid, t_block,
-                                   plan=plan, scalars=scalars)
+                                   hoisted=True, plan=plan, scalars=scalars,
+                                   overlap=ps.overlap)
     n_super = -(-ps.n_steps // t_block)
 
-    def launch():
-        a, b = cur, prev
-        for _ in range(n_super):
-            a, b = step(a, b, (arrays, svec))
-        jax.block_until_ready((a, b))
+    def make_launch(fn):
+        def launch():
+            a, b = cur, prev
+            for _ in range(n_super):
+                a, b = fn(a, b, coeffs_h)
+            jax.block_until_ready((a, b))
+        return launch
 
-    t = autotune.time_callable(launch, reps=reps, warmup=warmup)
+    launch = make_launch(step)
+    paired_sync_t = None
+    if ps.scaling and ps.overlap:
+        # the gate's ratio needs drift-free pairing: time the overlapped
+        # program and its synchronous twin in the same interleaved session
+        # (autotune.time_callable_paired) instead of trusting two
+        # separately-measured points on a contended host
+        step_sync = stepper.make_super_step(ps.spec, mesh, ps.grid, t_block,
+                                            hoisted=True, plan=plan,
+                                            scalars=scalars, overlap=False)
+        t, paired_sync_t = autotune.time_callable_paired(
+            launch, make_launch(step_sync), reps=reps, warmup=warmup)
+    else:
+        t = autotune.time_callable(launch, reps=reps, warmup=warmup,
+                                   stat="min" if ps.scaling else "median")
     lups = float(np.prod(ps.grid)) * n_super * t_block
+    n_z, n_y = gs.counts()
+    local_shape = (ps.grid[0] // n_z, ps.grid[1] // n_y, ps.grid[2])
+    g = ps.spec.radius * t_block
     measured = {"t_s": t, "glups": lups / t / 1e9,
                 "n_devices": int(mesh.devices.size), "t_block": t_block,
                 "n_super_steps": n_super,
-                "local_extended_shape": list(shape_e)}
+                "local_extended_shape": list(shape_e),
+                "overlap": ps.overlap,
+                "overlap_work": stepper.overlap_work(
+                    local_shape, ps.spec.radius, t_block,
+                    split_z=n_z > 1, split_y=n_y > 1),
+                "halo_bytes": halo.halo_bytes(
+                    local_shape, g, cur.dtype.itemsize,
+                    2 if ps.spec.time_order == 2 else 1)}
+    if ps.scaling:
+        measured["scaling"] = ps.scaling
+    if paired_sync_t is not None:
+        measured["paired_sync_t_s"] = paired_sync_t
     return measured, plan, source
 
 
@@ -357,7 +480,8 @@ def run_point(ps: PointSpec, registry: reg.PlanRegistry, *, reps: int,
     if ps.distributed:
         measured, plan, source = measure_distributed_point(
             ps, registry, reps=reps, warmup=warmup, seed=seed)
-        modeled = _distributed_model(ps, plan, measured)
+        modeled = (_scaling_model(ps, measured) if ps.scaling
+                   else _distributed_model(ps, plan, measured))
         plan_source = source
     else:
         if tune != "none":
@@ -386,7 +510,7 @@ def run_point(ps: PointSpec, registry: reg.PlanRegistry, *, reps: int,
         "word_bytes": ps.word_bytes,
         "dtype": ps.dtype_name,
         "distributed": ps.distributed,
-        "plan": dataclasses.asdict(plan),
+        "plan": dataclasses.asdict(plan) if plan is not None else None,
         "plan_source": plan_source,
         "measured": measured,
         "hw_fingerprint": hw.fingerprint(),
@@ -474,6 +598,46 @@ def _smoke_points(word_bytes: int) -> list[PointSpec]:
     return points
 
 
+SCALING_DEVICE_LADDER = (1, 2, 4, 8)
+
+
+def scaling_points(word_bytes: int = 4, *,
+                   device_ladder=SCALING_DEVICE_LADDER,
+                   n_steps: int = 8) -> list[PointSpec]:
+    """The strong/weak scaling lattice (``--scaling``).
+
+    For each case stencil: a strong leg (global grid fixed at the ladder's
+    top weak grid, shards shrink as devices grow) and a weak leg (per-shard
+    grid fixed, the global grid grows with the ladder), each measured under
+    BOTH super-step schedules so every (stencil, grid, devices) rung yields
+    an overlapped/synchronous throughput pair — the ratio
+    `benchmarks.scaling_gate` enforces and the overlap-model residual
+    section of the report explains.
+
+    `plan_mesh` keeps 'model' (grid-y) as the minor axis at these counts,
+    so every rung splits y only; the per-shard grids are sized so the zone
+    split stays feasible at the top rung (local ny > 2g at t_block=2) AND
+    large enough that a super-step costs well above timer resolution — at
+    toy sizes the sync/overlap pair ratio is pure noise.
+    """
+    cases = [(st.SPECS["7pt-const"], (32, 32, 32)),
+             (st.SPECS["25pt-const"], (32, 32, 32))]
+    n_max = max(device_ladder)
+    points = []
+    for spec, per_dev in cases:
+        nz, ny, nx = per_dev
+        strong = (nz, ny * n_max, nx)
+        for n in device_ladder:
+            for scaling, grid in (("strong", strong),
+                                  ("weak", (nz, ny * n, nx))):
+                for overlap in (False, True):
+                    points.append(PointSpec(
+                        spec, grid, n_steps, True, 1, word_bytes,
+                        distributed=True, n_devices=n, overlap=overlap,
+                        scaling=scaling))
+    return points
+
+
 def main(argv=None) -> dict:
     """CLI entry point; returns the sweep summary (tested directly)."""
     ap = argparse.ArgumentParser(
@@ -487,6 +651,13 @@ def main(argv=None) -> dict:
                          "lattice flags (--stencil/--sizes/--grid/--modes/"
                          "--batches/--steps/--distributed) are rejected, "
                          "timing flags (--reps/--warmup) apply")
+    ap.add_argument("--scaling", action="store_true",
+                    help="FIXED strong/weak scaling lattice: overlapped vs "
+                         "synchronous super-step pairs over the "
+                         f"{'x'.join(map(str, SCALING_DEVICE_LADDER))} "
+                         "device ladder (jnp path; results default "
+                         f"{SCALING_RESULTS}); lattice flags are rejected "
+                         "as with --smoke")
     ap.add_argument("--stencil", action="append",
                     help="stencil(s) to sweep: paper op, registered custom "
                          "op, or module.path:ATTR (default: all four)")
@@ -544,22 +715,26 @@ def main(argv=None) -> dict:
         importlib.import_module(args.op_module)
     registry = (reg.PlanRegistry(args.registry) if args.registry
                 else reg.default_registry())
-    results_path = args.results or (SMOKE_RESULTS if args.smoke
-                                    else DEFAULT_RESULTS)
+    results_path = args.results or (
+        SMOKE_RESULTS if args.smoke
+        else SCALING_RESULTS if args.scaling else DEFAULT_RESULTS)
     dtype_name = precision.dtype_name(args.dtype)
     word_bytes = (args.word_bytes if args.word_bytes is not None
                   else precision.word_bytes(dtype_name))
 
-    if args.smoke:
+    if args.smoke or args.scaling:
+        fixed = "--smoke" if args.smoke else "--scaling"
         clash = [f for f, v, d in (
+            ("--smoke --scaling", args.smoke and args.scaling, False),
             ("--stencil", args.stencil, None), ("--sizes", args.sizes, None),
             ("--grid", args.grid, None), ("--modes", args.modes, "fused"),
             ("--batches", args.batches, "1"), ("--steps", args.steps, 2),
             ("--dtype", dtype_name, "f32"),
             ("--distributed", args.distributed, False)) if v != d]
         if clash:
-            ap.error(f"--smoke runs a fixed lattice; drop {' '.join(clash)}")
-        points = _smoke_points(word_bytes)
+            ap.error(f"{fixed} runs a fixed lattice; drop {' '.join(clash)}")
+        points = (_smoke_points(word_bytes) if args.smoke
+                  else scaling_points(word_bytes))
         summary = run_sweep_points(points, registry=registry,
                                    results_path=results_path,
                                    resume=args.resume, reps=args.reps,

@@ -98,13 +98,34 @@ err = float(jnp.max(jnp.abs(want[0] - jax.device_get(got[0]))))
 assert err < 1e-4, err
 print("auto-plan shard-key OK")
 
-# 1b. hoisted-coefficient variant (one-time halo exchange) is equivalent
+# 1b. hoisting probe: the steady-state super-step ppermutes ONLY the
+#     solution state — 4 sends (2 axes x 2 directions) for a one-stream op.
+#     The time-invariant coefficients cross the wire in the one-time
+#     extender (its own 4 sends); a non-hoisted step pays both every
+#     super-step. Counted on the traced jaxpr, so a regression that sneaks
+#     the coefficient exchange back into the hot loop fails loudly.
 spec = st.SPECS["7pt-var"]
-state, coeffs = st.make_problem(spec, (8, 8, 16), seed=3)
-want = st.run_naive(spec, state, coeffs, 4)
-got = stepper.run_distributed(spec, mesh, state, coeffs, 4, t_block=2,
-                              hoisted=True)
-assert float(jnp.max(jnp.abs(want[0] - jax.device_get(got[0])))) < 1e-4
+grid = (8, 8, 16)
+gs = GridSharding(mesh)
+state, coeffs = st.make_problem(spec, grid, seed=3)
+cur = jax.device_put(state[0], gs.sharding())
+arrays, svec = stepper.canonical_coeffs(spec, coeffs, grid, cur.dtype)
+arrays = jax.device_put(arrays, gs.sharding(leading=1))
+extender = stepper.make_coeff_extender(spec, mesh, 2)
+coeffs_h = extender((arrays, svec))
+
+def n_ppermute(fn, *args):
+    return str(jax.make_jaxpr(fn)(*args)).count("ppermute")
+
+n_hoist = n_ppermute(stepper.make_super_step(spec, mesh, grid, 2,
+                                             hoisted=True),
+                     cur, cur, coeffs_h)
+n_plain = n_ppermute(stepper.make_super_step(spec, mesh, grid, 2),
+                     cur, cur, (arrays, svec))
+n_ext = n_ppermute(extender, (arrays, svec))
+assert n_hoist == 4, n_hoist
+assert n_ext == 4, n_ext
+assert n_plain == n_hoist + n_ext, (n_plain, n_hoist, n_ext)
 print("hoisted OK")
 
 # 2. int8 error-feedback compressed pmean: exact for equal grads,
@@ -185,6 +206,124 @@ print("ALL_SUBPROCESS_OK")
 """
 
 
+SCRIPT_OVERLAP = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, sys.argv[1])
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.core import stencils as st
+from repro.core.mwd import MWDPlan
+from repro.distributed import elastic, stepper
+
+MESHES = {
+    1: jax.make_mesh((1, 1), ("data", "model"), devices=jax.devices()[:1]),
+    2: jax.make_mesh((2, 1), ("data", "model"), devices=jax.devices()[:2]),
+    8: jax.make_mesh((2, 2, 2), ("pod", "data", "model")),
+}
+
+def check(spec, grid, T, tb, mesh, tol=None, **kw):
+    # overlap=True vs the synchronous schedule: BITWISE equal (tol=None),
+    # or within tol of naive when the run is lossy (compressed halos)
+    state, coeffs = st.make_problem(spec, grid, seed=3)
+    ref = stepper.run_distributed(spec, mesh, state, coeffs, T,
+                                  t_block=tb, **kw)
+    got = stepper.run_distributed(spec, mesh, state, coeffs, T,
+                                  t_block=tb, overlap=True, **kw)
+    bit = all(np.array_equal(np.asarray(a), np.asarray(b))
+              for a, b in zip(ref, got))
+    naive = st.run_naive(spec, state, coeffs, T)
+    err = float(np.abs(np.asarray(got[0]) - np.asarray(naive[0])).max())
+    budget = 1e-4 if tol is None else tol
+    assert err < budget, (spec.name, grid, err)
+    if tol is None:
+        assert bit, (spec.name, grid, mesh.devices.size)
+    return bit
+
+# 1. overlapped == synchronous bitwise: all four paper ops on 1/2/8-device
+#    meshes; T=5 at t_block=2 exercises the trailing partial super-step
+for nd in (1, 2, 8):
+    check(st.SPECS["7pt-const"], (24, 16, 8), 5, 2, MESHES[nd])
+    check(st.SPECS["7pt-var"], (24, 16, 8), 4, 2, MESHES[nd])
+    check(st.SPECS["25pt-const"], (72, 36, 16), 4, 2, MESHES[nd])
+    check(st.SPECS["25pt-var"], (72, 36, 16), 2, 2, MESHES[nd])
+print("overlap bitwise OK")
+
+# 1y. the scaling ladder's y-only meshes shard the other axis — the zone
+#     geometry and the mirrored interior-input chain differ per sharding
+#     case, so bitwise equality is checked there too
+for nd in (2, 8):
+    ymesh = jax.make_mesh((1, nd), ("data", "model"),
+                          devices=jax.devices()[:nd])
+    check(st.SPECS["7pt-const"], (24, 64, 8), 4, 2, ymesh)
+    check(st.SPECS["25pt-const"], (72, 144, 16), 4, 2, ymesh)
+print("overlap y-mesh OK")
+
+# 2. a custom IR op (not among the paper's four) gets the same guarantee
+from repro.core import ir
+_taps = [ir.Tap(0, 0, 0, ir.array(0))]
+_taps += [ir.Tap(*o, ir.array(k + 1)) for k, o in enumerate(
+    [(-1, 0, 0), (1, 0, 0), (0, -1, 0), (0, 1, 0), (0, 0, -1), (0, 0, 1),
+     (0, -1, -1), (0, 1, 1)])]
+custom = ir.StencilOp("ovl-custom9", tuple(_taps), coeff_scale=0.08)
+check(custom, (24, 16, 8), 4, 2, MESHES[8])
+print("overlap custom-op OK")
+
+# 3. fused MWD-kernel super-steps: the overlapped kernel schedule is
+#    bitwise-equal to the synchronous kernel schedule
+check(st.SPECS["7pt-const"], (24, 16, 8), 4, 2, MESHES[2],
+      plan=MWDPlan(d_w=2, n_f=1))
+check(st.SPECS["25pt-const"], (72, 36, 16), 4, 2, MESHES[8],
+      plan=MWDPlan(d_w=8, n_f=1))
+print("overlap kernel OK")
+
+# 4. compressed halos compose with overlap: lossy (so no bitwise claim),
+#    but inside the same error budget as the synchronous compressed run
+check(st.SPECS["7pt-const"], (24, 16, 8), 4, 2, MESHES[8],
+      compress=True, tol=5e-2)
+check(st.SPECS["25pt-const"], (72, 36, 16), 4, 2, MESHES[8],
+      compress=True, tol=5e-2)
+print("overlap compressed OK")
+
+# 5. elastic shrink-then-grow: ElasticStencilRun replays tuned plans from
+#    the registry at each mesh size (autotune stubbed to fail, so any
+#    resolution miss dies), overlap="auto" falls back where shards are too
+#    small, and the composed run still matches single-device naive
+from repro.core import autotune as _at, registry as _reg
+os.environ[_reg.ENV_VAR] = sys.argv[2] + "/elastic-plans.json"
+def _no_search(*a, **k):
+    raise AssertionError("elastic rescale fell through to a plan search")
+_at.autotune = _no_search
+spec = st.SPECS["7pt-const"]
+grid = (8, 16, 16)
+for nd in (8, 2):
+    shape_e = stepper.local_extended_shape(spec, elastic.build_mesh(nd),
+                                           grid, 2)
+    _reg.default_registry().put(spec, shape_e, MWDPlan(d_w=2, n_f=1), 9.0)
+state, coeffs = st.make_problem(spec, grid, seed=9)
+run = elastic.ElasticStencilRun(spec, state, coeffs, sys.argv[2],
+                                t_block=2, plan="auto", overlap="auto",
+                                n_devices=8)
+assert run.plan_source.startswith("registry"), run.plan_source
+run.advance(4)
+run.save()
+run.rescale(2)                      # shrink: 8 -> 2 devices
+assert run.plan_source.startswith("registry"), run.plan_source
+run.advance(2)
+run.save()
+run.rescale(8)                      # grow back
+run.advance(2)
+want = st.run_naive(spec, state, coeffs, 8)
+err = float(np.abs(np.asarray(jax.device_get(run.state[0]))
+                   - np.asarray(want[0])).max())
+assert err < 1e-4, err
+assert run.steps_done == 8, run.steps_done
+print("elastic shrink-grow OK")
+print("ALL_OVERLAP_OK")
+"""
+
+
 @pytest.mark.slow
 def test_distributed_subprocess(tmp_path):
     src = os.path.join(os.path.dirname(__file__), "..", "src")
@@ -195,3 +334,16 @@ def test_distributed_subprocess(tmp_path):
     assert "ALL_SUBPROCESS_OK" in proc.stdout, proc.stdout
     assert "auto-plan shard-key OK" in proc.stdout, proc.stdout
     assert "compressed-halo OK" in proc.stdout, proc.stdout
+
+
+@pytest.mark.slow
+def test_overlap_subprocess(tmp_path):
+    """Overlapped super-steps: bitwise vs sync + elastic rescale replay."""
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT_OVERLAP, src, str(tmp_path)],
+        capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "ALL_OVERLAP_OK" in proc.stdout, proc.stdout
+    assert "overlap bitwise OK" in proc.stdout, proc.stdout
+    assert "elastic shrink-grow OK" in proc.stdout, proc.stdout

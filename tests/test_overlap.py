@@ -1,0 +1,227 @@
+"""Fast units for the overlapped super-stepper's static pieces.
+
+Everything here is pure geometry/model/report code — no multi-device mesh
+needed (the subprocess matrix in test_distributed.py covers execution).
+"""
+
+import json
+import types
+
+import pytest
+
+from repro.core import autotune, models
+from repro.core import stencils as st
+from repro.distributed import stepper
+from repro.launch import mesh as launch_mesh
+from repro.launch import sweep
+
+
+# ---------------------------------------------------------------------------
+# overlap model (core/models.py)
+# ---------------------------------------------------------------------------
+
+def test_super_step_time_schedules():
+    i, b, e = 5.0, 1.0, 3.0
+    sync = models.super_step_time(i, b, e, overlap=False)
+    ovl = models.super_step_time(i, b, e, overlap=True)
+    assert sync == e + i + b
+    assert ovl == max(i, e) + b
+    # the overlapped win is exactly the hidden term, min(interior, exchange)
+    assert sync - ovl == pytest.approx(min(i, e))
+    # exchange fully hidden when the interior dominates (the paper's regime)
+    assert models.super_step_time(10.0, b, 2.0, overlap=True) == 10.0 + b
+
+
+# ---------------------------------------------------------------------------
+# partition geometry (distributed/stepper.py, pure static)
+# ---------------------------------------------------------------------------
+
+def _covered(part, nz_l, ny_l):
+    """Mark every local cell claimed by the interior + boundary zones."""
+    import numpy as np
+
+    cover = np.zeros((nz_l, ny_l), dtype=int)
+    (ka, kb), (kc, kd) = part.interior_kept
+    oz, oy = part.interior_origin
+    cover[ka + oz:kb + oz, kc + oy:kd + oy] += 1
+    for z in part.zones:
+        (za, zb), (ya, yb) = z.kept
+        zo, yo = z.origin
+        cover[za + zo:zb + zo, ya + yo:yb + yo] += 1
+    return cover
+
+
+@pytest.mark.parametrize("split_z,split_y", [(True, True), (True, False),
+                                             (False, True), (False, False)])
+def test_partition_geometry_tiles_the_block(split_z, split_y):
+    nz_l, ny_l, g = 12, 10, 2
+    part = stepper.partition_geometry((nz_l, ny_l, 8), g, split_z, split_y)
+    cover = _covered(part, nz_l, ny_l)
+    # every local cell written exactly once: no gaps, no double-writes
+    assert (cover == 1).all()
+    # boundary zones exist only for sharded axes, two per axis
+    assert len(part.zones) == 2 * (int(split_z) + int(split_y))
+    # each zone slab is 3g thick: kept g cells + g-deep support both sides
+    for z in part.zones:
+        sl = z.z if z.name.startswith("z_") else z.y
+        assert sl.stop - sl.start == 3 * g, z
+
+
+def test_overlap_work_counts():
+    shape, r, tb = (16, 12, 8), 1, 2
+    w = stepper.overlap_work(shape, r, tb)
+    # zone slabs re-sweep cells the interior trapezoid cannot finish, so the
+    # split does strictly more arithmetic than the synchronous sweep — but
+    # the interior (the part the exchange hides behind) is strictly less
+    assert w["interior_cells"] + w["boundary_cells"] > w["sync_cells"]
+    assert 0 < w["interior_cells"] < w["sync_cells"]
+    # unsharded axes move their cells from boundary zones into the interior
+    w_y = stepper.overlap_work(shape, r, tb, split_z=False)
+    assert w_y["boundary_cells"] < w["boundary_cells"]
+    assert w_y["interior_cells"] > w["interior_cells"]
+    assert w_y["sync_cells"] == w["sync_cells"]
+    # hand count, fully unsharded: pure trapezoid sum over the local block
+    w_0 = stepper.overlap_work((4, 4, 4), 1, 2, split_z=False, split_y=False)
+    assert w_0["boundary_cells"] == 0
+    x = 4 + 2 * 2 - 2                        # nx + 2g - 2r
+    assert w_0["interior_cells"] == ((4 + 2) * (4 + 2) + 4 * 4) * x
+    assert w_0["sync_cells"] == 2 * (4 + 2) * (4 + 2) * x
+
+
+def _fake_mesh(n_z=2, n_y=2):
+    return types.SimpleNamespace(axis_names=("data", "model"),
+                                 shape={"data": n_z, "model": n_y})
+
+
+def test_validate_super_step_messages():
+    spec = st.SPECS["7pt-const"]
+    with pytest.raises(ValueError, match="does not decompose evenly"):
+        stepper.validate_super_step(spec, _fake_mesh(), (7, 8, 8), 2)
+    with pytest.raises(ValueError, match="halo depth"):
+        stepper.validate_super_step(spec, _fake_mesh(), (4, 8, 8), 4)
+    # shards exist but the boundary zones would eat the whole block
+    with pytest.raises(ValueError, match="halo-independent interior"):
+        stepper.validate_super_step(spec, _fake_mesh(), (8, 8, 8), 2,
+                                    overlap=True)
+    assert not stepper.overlap_feasible(spec, _fake_mesh(), (8, 8, 8), 2)
+    # roomy shards: valid for both schedules
+    stepper.validate_super_step(spec, _fake_mesh(), (16, 16, 8), 2,
+                                overlap=True)
+    assert stepper.overlap_feasible(spec, _fake_mesh(), (16, 16, 8), 2)
+
+
+# ---------------------------------------------------------------------------
+# multi-host process mesh (launch/mesh.py, driven by stand-in devices)
+# ---------------------------------------------------------------------------
+
+def _dev(proc, dev_id):
+    return types.SimpleNamespace(process_index=proc, id=dev_id)
+
+
+def test_process_grid_topology():
+    devs = [_dev(1, 5), _dev(0, 1), _dev(1, 4), _dev(0, 0)]
+    rows = launch_mesh.process_grid(devs)
+    # one row per process, process-index-major, id-sorted within a row
+    assert [[d.id for d in row] for row in rows] == [[0, 1], [4, 5]]
+    assert [row[0].process_index for row in rows] == [0, 1]
+
+
+def test_process_grid_rejects_lame_host():
+    with pytest.raises(ValueError, match="uneven process topology"):
+        launch_mesh.process_grid([_dev(0, 0), _dev(0, 1), _dev(1, 2)])
+    with pytest.raises(ValueError, match="at least one device"):
+        launch_mesh.process_grid([])
+
+
+# ---------------------------------------------------------------------------
+# sweep point identity + timing policy
+# ---------------------------------------------------------------------------
+
+def test_point_key_scaling_extensions():
+    spec = st.SPECS["7pt-const"]
+    key = sweep.point_key(spec, (8, 8, 8), 2, True, 1, distributed=True,
+                          n_devices=4, overlap=True, scaling="strong")
+    assert key.endswith("|dist|d4|ovl|strong")
+    sync = sweep.point_key(spec, (8, 8, 8), 2, True, 1, distributed=True,
+                           n_devices=4, scaling="strong")
+    assert sync.endswith("|dist|d4|strong")
+    # the legacy whole-machine distributed key is untouched
+    legacy = sweep.point_key(spec, (8, 8, 8), 2, True, 1, distributed=True)
+    assert legacy.endswith("|dist")
+
+
+def test_time_callable_stat():
+    calls = []
+    assert autotune.time_callable(lambda: calls.append(1), reps=3, warmup=1,
+                                  stat="min") >= 0.0
+    assert len(calls) == 4
+    with pytest.raises(ValueError, match="stat"):
+        autotune.time_callable(lambda: None, stat="mean")
+
+
+def test_time_callable_paired_interleaves():
+    order = []
+    t_a, t_b = autotune.time_callable_paired(
+        lambda: order.append("a"), lambda: order.append("b"),
+        reps=2, warmup=1)
+    assert t_a >= 0.0 and t_b >= 0.0
+    # warmup a,b then timed reps alternate within the same session
+    assert order == ["a", "b", "a", "b", "a", "b"]
+
+
+# ---------------------------------------------------------------------------
+# scaling gate pairing (benchmarks/scaling_gate.py)
+# ---------------------------------------------------------------------------
+
+def _pt(stencil, n, regime, glups, t_s, overlap, paired=None):
+    m = {"glups": glups, "t_s": t_s, "n_devices": n, "scaling": regime,
+         "overlap": overlap}
+    if paired is not None:
+        m["paired_sync_t_s"] = paired
+    return {"stencil": stencil, "grid": [8, 8 * n, 8], "distributed": True,
+            "measured": m}
+
+
+def test_scaling_pairs_prefers_paired_timing():
+    from benchmarks import scaling_gate
+
+    points = {
+        # paired session says 1.25x even though the standalone sync point
+        # (drifted slow) would claim 2x — the paired ratio must win
+        "a": _pt("7pt-const", 8, "strong", 1.0, 0.02, False),
+        "b": _pt("7pt-const", 8, "strong", 2.0, 0.01, True, paired=0.0125),
+        # no paired record: fall back to the standalone glups ratio
+        "c": _pt("7pt-const", 8, "weak", 1.0, 0.02, False),
+        "d": _pt("7pt-const", 8, "weak", 1.1, 0.02, True),
+        # unmatched overlap leg and a non-scaling point are both ignored
+        "e": _pt("25pt-const", 4, "strong", 1.0, 0.02, True),
+        "f": {"stencil": "7pt-const", "grid": [8, 8, 8], "distributed": True,
+              "measured": {"glups": 1.0, "t_s": 0.02, "n_devices": 1,
+                           "overlap": False}},
+    }
+    pairs = scaling_gate.scaling_pairs(points)
+    assert len(pairs) == 2
+    by = {p["scaling"]: p for p in pairs}
+    assert by["strong"]["ratio"] == pytest.approx(1.25)
+    assert by["weak"]["ratio"] == pytest.approx(1.1)
+
+
+def test_scaling_gate_main(tmp_path):
+    from benchmarks import scaling_gate
+
+    path = str(tmp_path / "sweep-scaling.json")
+    points = {
+        "a": _pt("7pt-const", 8, "strong", 1.0, 0.02, False),
+        "b": _pt("7pt-const", 8, "strong", 1.2, 0.02, True, paired=0.024),
+        # a 2-device rung is reported but NOT gated (max-device rungs only)
+        "c": _pt("7pt-const", 2, "strong", 1.0, 0.02, False),
+        "d": _pt("7pt-const", 2, "strong", 0.5, 0.04, True, paired=0.02),
+    }
+    with open(path, "w") as f:
+        json.dump({"points": points}, f)
+    assert scaling_gate.main(["--results", path]) == 0
+    # tighten the geomean bar past the measured 1.2x: must fail
+    assert scaling_gate.main(["--results", path, "--min-ratio", "1.5"]) == 1
+    with open(path, "w") as f:
+        json.dump({"points": {}}, f)
+    assert scaling_gate.main(["--results", path]) == 1
