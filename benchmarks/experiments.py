@@ -48,7 +48,8 @@ def load_sweeps(results_dir: str = DEFAULT_RESULTS_DIR) -> dict:
     Later files (lexicographic) win on key collisions — stable regardless of
     filesystem enumeration order, so the render is deterministic.
     """
-    merged: dict = {"points": {}, "files": [], "fingerprints": set()}
+    merged: dict = {"points": {}, "files": [], "fingerprints": set(),
+                    "specs": set()}
     for path in sorted(glob.glob(os.path.join(results_dir, "sweep*.json"))):
         try:
             with open(path) as f:
@@ -59,7 +60,9 @@ def load_sweeps(results_dir: str = DEFAULT_RESULTS_DIR) -> dict:
         merged["points"].update(raw.get("points", {}))
         for p in raw.get("points", {}).values():
             merged["fingerprints"].add(p.get("hw_fingerprint", "?"))
+            merged["specs"].add(p.get("spec") or "(unrecorded)")
     merged["fingerprints"] = sorted(merged["fingerprints"])
+    merged["specs"] = sorted(merged["specs"])
     return merged
 
 
@@ -108,6 +111,26 @@ def glups_table(pts: list[dict], calib: models.EcmCalibration | None) -> str:
             f"| {_grid_str(p)} | {p['mode']} | {p['batch']} | {_plan_str(p)} "
             f"| {meas['glups']:.5f} | {p['model']['glups']:.2f} "
             f"| {cal} | {res} |")
+    return "\n".join(rows)
+
+
+def ecm_table(pts: list[dict]) -> str:
+    """Per-point ECM term breakdown with the binding term named.
+
+    Only points recorded with the per-term ``model.ecm`` columns render
+    (older results files without them are silently skipped by the caller).
+    """
+    rows = ["| grid | mode | B | HBM bytes | latency bytes | t_hbm | "
+            "t_compute | t_latency | dominant |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for p in pts:
+        ecm = p["model"]["ecm"]
+        dom = ecm["dominant"]
+        rows.append(
+            f"| {_grid_str(p)} | {p['mode']} | {p['batch']} "
+            f"| {p['traffic']['hbm_bytes']:.2e} | {ecm['latency_bytes']:.2e} "
+            f"| {ecm['t_hbm']:.2e} | {ecm['t_compute']:.2e} "
+            f"| {ecm['t_latency']:.2e} | **{dom}** |")
     return "\n".join(rows)
 
 
@@ -446,14 +469,18 @@ def render(results_dir: str = DEFAULT_RESULTS_DIR) -> str:
                "(`--check`). Wall-clock numbers are")
     out.append("> whatever machine ran the sweep (this repo commits the CPU "
                "interpret-mode smoke sweep);")
-    out.append("> model columns are the analytic v5e ECM/energy predictions "
-               "from `repro.core.models`.")
+    out.append("> model columns are the analytic ECM/energy predictions "
+               "from `repro.core.models` under the")
+    out.append("> recorded device spec (`specs/*.json`, see Provenance).")
     out.append("")
     out.append("## Provenance")
     out.append("")
     out.append(f"- results files: {', '.join(sweeps['files']) or '(none)'}")
     out.append(f"- sweep points: {len(launch_pts)} single-launch + "
                f"{len(dist_pts)} distributed + {len(scaling_pts)} scaling")
+    out.append("- device specs: "
+               + (", ".join(f"`{s}`" for s in sweeps.get("specs", []))
+                  or "(none)"))
     out.append("- hardware fingerprints: "
                + (", ".join(f"`{f}`" for f in sweeps["fingerprints"])
                   or "(none)"))
@@ -478,6 +505,28 @@ def render(results_dir: str = DEFAULT_RESULTS_DIR) -> str:
         out.append("")
         out.append(glups_table(sp, calib))
     out.append("")
+
+    ecm_pts = [p for p in launch_pts
+               if p.get("dtype", "f32") == "f32" and "ecm" in p["model"]]
+    if ecm_pts:
+        out.append("## 1b. ECM terms & latency-bound detection")
+        out.append("")
+        out.append("Per-term ECM breakdown under the recorded device spec. "
+                   "A launch whose HBM traffic falls")
+        out.append("under the spec's `latency_bytes` crossover "
+                   "(`hbm_bw * hbm_latency_cycles / freq`) cannot")
+        out.append("saturate the memory system: its floor is the first-"
+                   "access latency, not bandwidth, and the")
+        out.append("**dominant** column reports `latency` instead of `hbm` "
+                   "— the small grids the paper's")
+        out.append("bandwidth model would otherwise mis-price.")
+        by_ecm = _by_stencil(ecm_pts)
+        for name, sp in by_ecm.items():
+            out.append("")
+            out.append(f"### {name}")
+            out.append("")
+            out.append(ecm_table(sp))
+        out.append("")
 
     out.append("## 2. Memory traffic vs grid size (Fig. 4 analog)")
     out.append("")
@@ -556,6 +605,8 @@ def render(results_dir: str = DEFAULT_RESULTS_DIR) -> str:
         out.append(f"| `hbm_bytes_per_s` | {_rate(c['hbm_bytes_per_s'])} |")
         out.append(f"| `t_dispatch_s` | {c['t_dispatch_s']:.2e} |")
         out.append(f"| points | {c['n_points']} |")
+        if c.get("spec"):
+            out.append(f"| device spec | `{c['spec']}` |")
         out.append("")
         out.append(f"Residuals (calibrated vs measured): mean abs "
                    f"{residuals['mean_abs_rel_err']:.0%}, max abs "

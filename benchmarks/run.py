@@ -48,7 +48,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import traffic
-from repro import hw
 from repro.core import autotune, ir, models, mwd, registry, stencils as st
 from repro.core.mwd import MWDPlan
 from repro.kernels import ops

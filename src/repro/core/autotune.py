@@ -8,6 +8,15 @@ Flow, mirroring the paper:
   3. score with an injected measure() callback — wall-clock on hardware, the
      ECM/roofline model in dry-run mode (this container).
 
+The machine model is a declarative `repro.core.specs.DeviceSpec`
+(``chip=None`` resolves the process default), so the same search runs
+against any spec file. Measured searches are spec-aware twice over: the
+analytic model under the active spec positions each thread-group's seed
+(a free cold-start hill-climb before the first wall-clock call) and prunes
+candidates whose predicted score falls below `prune_ratio` of the best
+analytic score seen, so the expensive measure() budget concentrates on
+contenders.
+
 The tuner dynamically grows the number of measured diamond rows until the
 score stabilizes, like the paper's "acceptable performance" loop.
 """
@@ -18,8 +27,7 @@ import dataclasses
 import math
 from typing import Callable
 
-from repro import hw
-from repro.core import models
+from repro.core import models, specs as devspecs
 from repro.core.mwd import MWDPlan
 from repro.core.stencils import StencilSpec
 
@@ -40,7 +48,7 @@ def _plan_valid(spec: StencilSpec, plan: MWDPlan) -> bool:
 
 
 def model_score(spec: StencilSpec, grid_shape, word_bytes: int = 4,
-                chip: hw.ChipSpec = hw.V5E,
+                chip: devspecs.DeviceSpec | None = None,
                 batch: int = 1) -> Callable[[MWDPlan], float]:
     """Default scorer: ECM-TPU predicted GLUP/s (per device).
 
@@ -48,7 +56,10 @@ def model_score(spec: StencilSpec, grid_shape, word_bytes: int = 4,
     dispatch advances `batch` independent grids, so the steady-state terms
     scale by B while the dispatch cost is amortized to T_d/B per request
     (`models.batch_amortized_time`). B=1 keeps the single-request model.
+    `chip=None` resolves the process default device spec once, at scorer
+    construction — the returned callable is pinned to that spec.
     """
+    chip = chip or devspecs.current_spec()
     nz, ny, nx = grid_shape
 
     def score(plan: MWDPlan) -> float:
@@ -179,7 +190,7 @@ def time_mwd_launch(spec: StencilSpec, states, coeffs, n_steps: int,
 
 
 def measure_score(spec: StencilSpec, grid_shape, word_bytes: int = 4,
-                  chip: hw.ChipSpec = hw.V5E, *, n_steps: int = 4,
+                  chip: devspecs.DeviceSpec | None = None, *, n_steps: int = 4,
                   reps: int = 3, warmup: int = 1, seed: int = 0,
                   batch: int = 1, dtype=None) -> Callable[[MWDPlan], float]:
     """Measured scorer: wall-clock GLUP/s of the real `ops.mwd` launch.
@@ -207,6 +218,7 @@ def measure_score(spec: StencilSpec, grid_shape, word_bytes: int = 4,
     """
     from repro.core import stencils as st
 
+    chip = chip or devspecs.current_spec()
     nz, ny, nx = grid_shape
     problems: dict[int, tuple] = {}
 
@@ -251,7 +263,7 @@ def _neighbors(plan: MWDPlan, radius: int,
     return cands
 
 
-def _seed_d_w(spec: StencilSpec, n_xb: int, chip: hw.ChipSpec,
+def _seed_d_w(spec: StencilSpec, n_xb: int, chip: devspecs.DeviceSpec,
               d_w_cap: int | None = None) -> int:
     """Largest D_w fitting VMEM (Eq. 3) — the model-pruned starting point."""
     step = 2 * spec.radius
@@ -263,17 +275,53 @@ def _seed_d_w(spec: StencilSpec, n_xb: int, chip: hw.ChipSpec,
     return d_w
 
 
+def _analytic_climb(analytic: Callable[[MWDPlan], float], seed: MWDPlan,
+                    radius: int, d_w_cap: int | None = None,
+                    budget: int = 128) -> tuple[MWDPlan, float]:
+    """Free hill-climb under the analytic model only; returns (plan, score).
+
+    The measured search's cold start: positions each thread-group's seed at
+    the model optimum before the first wall-clock call is spent.
+    """
+    scored: dict[MWDPlan, float] = {}
+
+    def ev(plan: MWDPlan) -> float:
+        if plan not in scored and len(scored) < budget:
+            scored[plan] = analytic(plan)
+        return scored.get(plan, -math.inf)
+
+    cur, cur_score = seed, ev(seed)
+    while True:
+        improved = False
+        for cand in _neighbors(cur, radius, d_w_cap):
+            s = ev(cand)
+            if s > cur_score:
+                cur, cur_score, improved = cand, s, True
+        if not improved:
+            break
+    return cur, cur_score
+
+
 def autotune(spec: StencilSpec, grid_shape, devices_x: int = 1,
              measure: Callable[[MWDPlan], float] | None = None,
-             chip: hw.ChipSpec = hw.V5E, word_bytes: int = 4,
+             chip: devspecs.DeviceSpec | None = None, word_bytes: int = 4,
              max_evals: int = 64, d_w_cap: int | None = None,
-             batch: int = 1) -> TuneResult:
+             batch: int = 1, prune_ratio: float = 0.25) -> TuneResult:
     """Model-pruned local search for the best MWD plan (paper Fig. 7).
 
     `measure` scores candidates: `model_score` (analytic, the default) or
     `measure_score` (wall-clock on the real launch — the measured tuning
     path `repro.launch.tune` drives). The default `MWDPlan()` is always
     evaluated first, so the winner never scores below the untuned baseline.
+
+    `chip=None` resolves the process default device spec. When `measure`
+    is injected (a measured search), the analytic model under that spec
+    does double duty: a free cold-start hill-climb positions each
+    thread-group's seed at the model optimum, and candidates whose
+    analytic score falls below ``prune_ratio`` times the best analytic
+    score seen so far are scored ``-inf`` without measuring (set
+    ``prune_ratio=0`` to measure everything). The first candidate (the
+    untuned baseline) is always measured.
 
     `d_w_cap` bounds the diamond width the search may try; measured runs cap
     it at the grid's y extent so the seed (sized for VMEM, Eq. 3) cannot
@@ -284,15 +332,30 @@ def autotune(spec: StencilSpec, grid_shape, devices_x: int = 1,
     parameterizes the default `model_score`; an injected `measure` callback
     is used as-is.
     """
+    chip = chip or devspecs.current_spec()
     nz, ny, nx = grid_shape
-    measure = measure or model_score(spec, grid_shape, word_bytes, chip,
-                                     batch)
+    analytic = model_score(spec, grid_shape, word_bytes, chip, batch)
+    is_measured = measure is not None
+    measure = measure or analytic
     evaluated: dict[MWDPlan, float] = {}
+    analytic_ref = -math.inf          # best analytic score seen (prune ref)
 
     def eval_plan(plan: MWDPlan) -> float:
-        if plan not in evaluated and len(evaluated) < max_evals:
-            evaluated[plan] = measure(plan)
-        return evaluated.get(plan, -math.inf)
+        nonlocal analytic_ref
+        if plan in evaluated:
+            return evaluated[plan]
+        if len(evaluated) >= max_evals:
+            return -math.inf
+        if is_measured and prune_ratio > 0.0:
+            a = analytic(plan)
+            analytic_ref = max(analytic_ref, a)
+            # the first candidate sets the reference and is never pruned;
+            # later ones must predict at least prune_ratio of the best
+            if a < prune_ratio * analytic_ref and a < analytic_ref:
+                evaluated[plan] = -math.inf
+                return -math.inf
+        evaluated[plan] = measure(plan)
+        return evaluated[plan]
 
     # the untuned default is the floor every tuned result must clear
     baseline = MWDPlan()
@@ -304,6 +367,10 @@ def autotune(spec: StencilSpec, grid_shape, devices_x: int = 1,
         n_xb = (nx // tg) * word_bytes * spec.bytes_per_cell
         seed = MWDPlan(d_w=_seed_d_w(spec, n_xb, chip, d_w_cap), n_f=1,
                        tg_x=tg)
+        if is_measured:
+            # cold start: let the free analytic model walk the seed to its
+            # optimum before spending wall-clock measurements
+            seed, _ = _analytic_climb(analytic, seed, spec.radius, d_w_cap)
         cur, cur_score = seed, eval_plan(seed)
         while True:  # local hill-climb (paper's recursive local search)
             improved = False

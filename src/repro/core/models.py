@@ -4,14 +4,19 @@
 * Eq. 4/5  — memory-traffic / code-balance model (bytes per LUP).
 * ECM-TPU  — {T_compute || T_vmem || T_hbm} phenomenological model (Sec. 2.2),
              with TPU's software-managed memory making the transfer terms exact.
-* Roofline — the three graded terms (compute / memory / collective).
+* Roofline — the graded terms (compute / memory / collective / latency).
 * Energy   — Fig. 19 analog: E = P_static*T + e_flop*F + e_byte*B_hbm.
 * Calibration — Sec. 7-8 analog: `fit_ecm` fits the phenomenological
              constants to measured sweep points (repro.launch.sweep) and
-             `model_residuals` confronts model with measurement.
+             `model_residuals` confronts model with measurement; fits are
+             persisted as per-spec artifacts (`save_calibration`).
 
-All models are pure functions of the stencil spec + tiling plan + hardware
-spec so the auto-tuner and the benchmarks share one source of truth.
+All models are pure functions of the stencil spec + tiling plan + the
+machine model (a declarative `repro.core.specs.DeviceSpec`; ``chip=None``
+resolves the process default — ``--spec`` / ``$REPRO_DEVICE_SPEC``), so the
+auto-tuner and the benchmarks share one source of truth. Launches whose
+HBM traffic falls under the spec's derived ``latency_bytes`` crossover are
+reported latency-bound instead of being mis-modeled as bandwidth-bound.
 """
 
 from __future__ import annotations
@@ -19,7 +24,7 @@ from __future__ import annotations
 import dataclasses
 import math
 
-from repro import hw
+from repro.core import specs as devspecs
 from repro.core.precision import DEFAULT_WORD_BYTES
 from repro.core.stencils import StencilSpec
 from repro.core.tiling import wavefront_width
@@ -44,12 +49,14 @@ def cache_block_bytes(spec: StencilSpec, d_w: int, n_f: int, n_xb: int) -> float
 
 
 def vmem_fits(spec: StencilSpec, d_w: int, n_f: int, n_xb: int,
-              chip: hw.ChipSpec = hw.V5E, double_buffer: bool = True) -> bool:
+              chip: devspecs.DeviceSpec | None = None,
+              double_buffer: bool = True) -> bool:
     """VMEM-fit constraint for the auto-tuner (Eq. 3).
 
     Software-managed memory makes the footprint exact; `double_buffer` adds
     2x the in/out DMA slab buffers the pipelined kernel keeps in flight.
     """
+    chip = chip or devspecs.current_spec()
     need = cache_block_bytes(spec, d_w, n_f, n_xb)
     if double_buffer:
         need += 2.0 * n_xb * n_f * spec.bytes_per_cell  # in+out slab buffers
@@ -215,15 +222,31 @@ class EcmPrediction:
     t_vmem: float             # s: VMEM<->VREG traffic (overlappable on TPU)
     t_hbm: float              # s: HBM<->VMEM traffic at code balance B_C
     lups: float
+    t_latency: float = 0.0    # s: first-access HBM latency floor
+    hbm_bytes: float = 0.0    # HBM traffic the prediction priced
 
     @property
     def t_total(self) -> float:
-        """Steady-state runtime bound: max of the three overlapped terms."""
+        """Steady-state runtime bound: max of the overlapped terms."""
         # TPU DMA engines overlap VMEM traffic with compute; HBM DMA overlaps
-        # too, so the steady-state bound is the max of the three (roofline
+        # too, so the steady-state bound is the max of the terms (roofline
         # limit); the paper's non-overlapping T_nOL has no TPU analogue
-        # because loads don't retire through the scalar pipe.
-        return max(self.t_compute, self.t_vmem, self.t_hbm)
+        # because loads don't retire through the scalar pipe. The latency
+        # floor joins the max: a launch cannot finish before its first HBM
+        # access lands, however little it streams.
+        return max(self.t_compute, self.t_vmem, self.t_hbm, self.t_latency)
+
+    @property
+    def dominant(self) -> str:
+        """The binding term: "compute", "vmem", "hbm" or "latency".
+
+        Small grids whose traffic falls under the spec's ``latency_bytes``
+        crossover report "latency" here — the detection that stops them
+        being mis-modeled (and mis-tuned) as bandwidth-bound.
+        """
+        terms = {"compute": self.t_compute, "vmem": self.t_vmem,
+                 "hbm": self.t_hbm, "latency": self.t_latency}
+        return max(terms, key=terms.get)
 
     @property
     def glups(self) -> float:
@@ -232,15 +255,17 @@ class EcmPrediction:
 
 
 def ecm_predict(spec: StencilSpec, code_balance_bytes: float, lups: float,
-                chip: hw.ChipSpec = hw.V5E,
+                chip: devspecs.DeviceSpec | None = None,
                 word_bytes: int = DEFAULT_WORD_BYTES,
                 redundancy: float = 1.0) -> EcmPrediction:
     """ECM-TPU prediction for `lups` updates at the given code balance.
 
     `redundancy` > 1 prices overlapped (ghost-zone) kernels, which recompute
     halo cells; the memory terms scale with it too since redundant cells are
-    streamed through VMEM like real ones.
+    streamed through VMEM like real ones. `chip=None` resolves the process
+    default device spec.
     """
+    chip = chip or devspecs.current_spec()
     flops = spec.flops_per_lup * lups * redundancy
     # VMEM traffic: every LUP streams its stencil reads once through VREGs;
     # approximate with (n_streams + 1) words per LUP (in-VMEM reuse of
@@ -252,6 +277,8 @@ def ecm_predict(spec: StencilSpec, code_balance_bytes: float, lups: float,
         t_vmem=vmem_bytes / chip.vmem_bw,
         t_hbm=hbm_bytes / chip.hbm_bw,
         lups=lups,
+        t_latency=chip.hbm_latency_s if hbm_bytes > 0 else 0.0,
+        hbm_bytes=hbm_bytes,
     )
 
 
@@ -268,33 +295,44 @@ class RooflineTerms:
     flops_per_device: float
     bytes_per_device: float
     coll_bytes_per_device: float
+    t_latency: float = 0.0
 
     @property
     def dominant(self) -> str:
-        """Name of the binding term: "compute", "memory" or "collective"."""
+        """Binding term: "compute", "memory", "collective" or "latency"."""
         terms = {"compute": self.t_compute, "memory": self.t_memory,
-                 "collective": self.t_collective}
+                 "collective": self.t_collective, "latency": self.t_latency}
         return max(terms, key=terms.get)
 
     @property
     def t_bound(self) -> float:
-        """Roofline-limited runtime: the largest of the three terms."""
-        return max(self.t_compute, self.t_memory, self.t_collective)
+        """Roofline-limited runtime: the largest of the terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective,
+                   self.t_latency)
 
     @property
     def roofline_fraction(self) -> float:
         """Fraction of the binding roofline achievable with perfect overlap.
 
-        1.0 means the dominant term fully hides the other two (at the roof).
+        1.0 means the dominant term fully hides the others (at the roof).
+        The latency floor is not summed — it is a floor under the memory
+        phase, not an extra serialized phase.
         """
         s = self.t_compute + self.t_memory + self.t_collective
+        s = max(s, self.t_latency)
         return self.t_bound / s if s else 0.0
 
 
 def roofline(flops_per_device: float, bytes_per_device: float,
              coll_bytes_per_device: float,
-             chip: hw.ChipSpec = hw.V5E) -> RooflineTerms:
-    """The three graded roofline terms for per-device FLOPs/bytes/collective."""
+             chip: devspecs.DeviceSpec | None = None) -> RooflineTerms:
+    """The graded roofline terms for per-device FLOPs/bytes/collective.
+
+    Includes the launch latency floor: when ``bytes_per_device`` falls under
+    the spec's ``latency_bytes`` crossover the latency term exceeds the
+    memory term and `dominant` reports "latency" instead of "memory".
+    """
+    chip = chip or devspecs.current_spec()
     return RooflineTerms(
         t_compute=flops_per_device / chip.peak_flops_bf16,
         t_memory=bytes_per_device / chip.hbm_bw,
@@ -302,6 +340,7 @@ def roofline(flops_per_device: float, bytes_per_device: float,
         flops_per_device=flops_per_device,
         bytes_per_device=bytes_per_device,
         coll_bytes_per_device=coll_bytes_per_device,
+        t_latency=chip.hbm_latency_s if bytes_per_device > 0 else 0.0,
     )
 
 
@@ -313,9 +352,10 @@ def roofline(flops_per_device: float, bytes_per_device: float,
 class EcmCalibration:
     """Per-machine effective ECM constants fitted from measured sweep points.
 
-    The a-priori ECM-TPU model is parameterized by the v5e datasheet
-    (`hw.V5E`); the machine actually measured (this container: CPU interpret
-    mode, elsewhere: a real TPU) realizes different effective throughputs.
+    The a-priori ECM-TPU model is parameterized by a declarative device
+    spec (``specs/*.json``); the machine actually measured (this container:
+    CPU interpret mode, elsewhere: a real TPU) realizes different effective
+    throughputs.
     The paper's Sec. 7 validation therefore *fits* the phenomenological
     constants to the sweep — the shape of the model (work terms plus a fixed
     dispatch) is the claim under test, the constants are per-machine:
@@ -333,6 +373,7 @@ class EcmCalibration:
     t_dispatch_s: float        # fixed per-launch overhead (s)
     n_points: int              # sweep points the fit consumed
     max_rel_err: float         # worst |pred - meas| / meas over the fit set
+    spec: str = ""             # device-spec name the fit was taken under
 
     def predict_s(self, flops: float, hbm_bytes: float) -> float:
         """Calibrated runtime (s) of a launch doing `flops` and `hbm_bytes`."""
@@ -344,7 +385,7 @@ class EcmCalibration:
         return t
 
 
-def fit_ecm(points) -> EcmCalibration:
+def fit_ecm(points, spec: str | None = None) -> EcmCalibration:
     """Least-squares fit of the ECM constants from measured sweep points.
 
     `points` is an iterable of ``(flops, hbm_bytes, measured_s)`` triples
@@ -353,7 +394,10 @@ def fit_ecm(points) -> EcmCalibration:
     unconstrained solution drives negative is clamped to zero (that term is
     not observable in the sweep — e.g. all points memory-bound) and the
     remaining terms are re-fitted.  Raises ValueError on an empty point set;
-    a single point degenerates to a pure-dispatch fit.
+    a single point degenerates to a pure-dispatch fit.  `spec` names the
+    device spec the measurements were taken under (default: the process
+    default spec); it is recorded on the calibration so persisted artifacts
+    (`save_calibration`) stay attributable.
     """
     import numpy as np
 
@@ -382,6 +426,7 @@ def fit_ecm(points) -> EcmCalibration:
         t_dispatch_s=c,
         n_points=len(pts),
         max_rel_err=0.0,
+        spec=spec if spec is not None else devspecs.current_spec().name,
     )
     worst = 0.0
     for f, bb, t in pts:
@@ -450,10 +495,51 @@ class EnergyEstimate:
 
 
 def energy(flops: float, hbm_bytes: float, runtime_s: float,
-           chip: hw.ChipSpec = hw.V5E) -> EnergyEstimate:
+           chip: devspecs.DeviceSpec | None = None) -> EnergyEstimate:
     """Fig. 19 energy model: E = P_static*T + e_flop*F + e_byte*B_hbm."""
+    chip = chip or devspecs.current_spec()
     return EnergyEstimate(
         core_j=chip.joules_per_flop * flops,
         hbm_j=chip.joules_per_hbm_byte * hbm_bytes,
         static_j=chip.static_power_w * runtime_s,
     )
+
+
+# ---------------------------------------------------------------------------
+# Per-spec calibration artifacts
+# ---------------------------------------------------------------------------
+
+def calibration_path(results_dir: str, spec_name: str) -> str:
+    """Canonical artifact path for a spec's calibration: ``ecm-<spec>.json``."""
+    import os
+    return os.path.join(results_dir, f"ecm-{spec_name}.json")
+
+
+def save_calibration(calib: EcmCalibration, results_dir: str) -> str:
+    """Persist a fitted calibration as the per-spec artifact; returns path.
+
+    The artifact is keyed by the calibration's recorded spec name so fits
+    taken under different machine models never clobber each other.
+    """
+    import json
+    import os
+    if not calib.spec:
+        raise ValueError("calibration has no spec name; fit with fit_ecm(points, spec=...)")
+    os.makedirs(results_dir, exist_ok=True)
+    path = calibration_path(results_dir, calib.spec)
+    with open(path, "w") as f:
+        json.dump(dataclasses.asdict(calib), f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def load_calibration(results_dir: str, spec_name: str) -> EcmCalibration | None:
+    """Load the persisted calibration for `spec_name`, or None if absent."""
+    import json
+    import os
+    path = calibration_path(results_dir, spec_name)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        raw = json.load(f)
+    return EcmCalibration(**raw)

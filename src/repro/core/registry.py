@@ -11,12 +11,23 @@ Registry layout (one JSON file, human-diffable):
      "plans": {"<stencil>@<ir fp>|<nz>x<ny>x<nx>|w<word>|dx<dx>|b<batch>": {
          "plan": {"d_w": 16, "n_f": 2, "tg_x": 1, "fused": true, ...},
          "score": 12.3, "source": "measured", "evals": 14,
-         "fingerprint": "<hw.fingerprint() at tune time>"}}}
+         "spec": "tpu-v5e",
+         "fingerprint": "<specs.fingerprint() at tune time>"}}}
 
-Invalidation: entries record the hardware fingerprint they were tuned on;
-a lookup under a different fingerprint treats the entry as stale (dropped on
-the next save) so a registry file carried to new hardware silently re-tunes
-instead of replaying a wrong plan.  Keys embed the operator's structural IR
+Invalidation: entries record the device-spec name and the fingerprint they
+were tuned under. A lookup whose fingerprint differs falls in two cases:
+
+  * same spec (or a legacy entry with no recorded spec): the machine
+    changed under the entry — stale, dropped on the next save, so a
+    registry file carried to new hardware silently re-tunes instead of
+    replaying a wrong plan;
+  * different spec: the entry is a FOREIGN plan, kept on disk and offered
+    to `repro.compat.translate_entry`, which revalidates the plan's
+    geometry/VMEM fit under the current spec and rescales its score by the
+    ratio of analytic model predictions — a portable plan resolves with
+    ``plan_source="translated:<source spec>"`` and zero re-measurement.
+
+Keys embed the operator's structural IR
 fingerprint; legacy name-only keys (pre-IR files) are dropped at load, so a
 stale cache re-tunes gracefully instead of colliding, and pre-batch keys
 missing the trailing ``b<B>`` segment are upgraded to ``b1`` at load (a
@@ -37,7 +48,7 @@ import json
 import os
 import tempfile
 
-from repro import hw
+from repro.core import specs as devspecs
 from repro.core.mwd import MWDPlan
 from repro.core.stencils import StencilSpec
 
@@ -88,15 +99,16 @@ class RegistryEntry:
 
     plan: MWDPlan
     score: float               # GLUP/s under `source`'s scorer
-    source: str                # "measured" or "model"
-    fingerprint: str           # hw.fingerprint() at tune time
+    source: str                # "measured", "model" or "translated:<spec>"
+    fingerprint: str           # specs.fingerprint() at tune time
     evals: int = 0             # plans the search evaluated
+    spec: str = ""             # device-spec name at tune time ("" = legacy)
 
     def to_dict(self) -> dict:
         """JSON-serializable form (inverse of `from_dict`)."""
         return {"plan": dataclasses.asdict(self.plan), "score": self.score,
                 "source": self.source, "fingerprint": self.fingerprint,
-                "evals": self.evals}
+                "evals": self.evals, "spec": self.spec}
 
     @classmethod
     def from_dict(cls, d: dict) -> "RegistryEntry":
@@ -104,12 +116,15 @@ class RegistryEntry:
 
         Raises on unknown/garbage fields (the caller drops the entry); a
         kernel-invalid but well-formed plan is clamped by `_sanitize`, so a
-        hand-edited registry file cannot crash a launch.
+        hand-edited registry file cannot crash a launch. A missing ``spec``
+        field (pre-spec schema) loads as "" and is treated like a same-spec
+        entry for staleness purposes.
         """
         return cls(plan=_sanitize(MWDPlan(**d["plan"])),
                    score=float(d["score"]), source=str(d["source"]),
                    fingerprint=str(d["fingerprint"]),
-                   evals=int(d.get("evals", 0)))
+                   evals=int(d.get("evals", 0)),
+                   spec=str(d.get("spec", "")))
 
 
 def _sanitize(plan: MWDPlan) -> MWDPlan:
@@ -168,9 +183,17 @@ class PlanRegistry:
                 continue            # one bad entry must not poison the rest
 
     def save(self) -> None:
-        """Atomically persist all non-stale entries to `self.path`."""
-        fp = hw.fingerprint()
-        live = {k: e for k, e in self._entries.items() if e.fingerprint == fp}
+        """Atomically persist all non-stale entries to `self.path`.
+
+        Stale means: fingerprint mismatch under the SAME spec (or a legacy
+        entry with no recorded spec). Entries tuned under a different spec
+        are foreign, not stale — they are kept so `resolve` can translate
+        them under the current spec.
+        """
+        fp = devspecs.fingerprint()
+        name = devspecs.current_spec().name
+        live = {k: e for k, e in self._entries.items()
+                if e.fingerprint == fp or (e.spec and e.spec != name)}
         payload = {"version": SCHEMA_VERSION,
                    "plans": {k: e.to_dict() for k, e in live.items()}}
         d = os.path.dirname(self.path) or "."
@@ -189,20 +212,29 @@ class PlanRegistry:
         return len(self._entries)
 
     def stats(self) -> dict:
-        """Entry counts by provenance: total, measured, model, stale.
+        """Entry counts by provenance: total, measured, model, stale, foreign.
 
-        "stale" counts entries recorded under a hardware fingerprint other
-        than the current one (they will be pruned at the next save). The
-        sweep harness (`repro.launch.sweep --tune ...`) prints this before
-        and after a bulk warming run so the registry growth is visible.
+        "stale" counts same-spec entries recorded under a fingerprint other
+        than the current one (pruned at the next save); "foreign" counts
+        entries tuned under a different device spec (kept as translation
+        sources). "spec" names the active device spec the counts were taken
+        under. The sweep harness (`repro.launch.sweep --tune ...`) prints
+        this before and after a bulk warming run so the registry growth is
+        visible.
         """
-        fp = hw.fingerprint()
-        stale = sum(1 for e in self._entries.values() if e.fingerprint != fp)
+        fp = devspecs.fingerprint()
+        name = devspecs.current_spec().name
+        stale = foreign = 0
         by_source: dict[str, int] = {}
         for e in self._entries.values():
             if e.fingerprint == fp:
                 by_source[e.source] = by_source.get(e.source, 0) + 1
+            elif e.spec and e.spec != name:
+                foreign += 1
+            else:
+                stale += 1
         return {"total": len(self._entries), "stale": stale,
+                "foreign": foreign, "spec": name,
                 "measured": by_source.get("measured", 0),
                 "model": by_source.get("model", 0)}
 
@@ -218,8 +250,10 @@ class PlanRegistry:
         entry = self._entries.get(key)
         if entry is None:
             return None
-        fingerprint = fingerprint or hw.fingerprint()
+        fingerprint = fingerprint or devspecs.fingerprint()
         if entry.fingerprint != fingerprint:
+            if entry.spec and entry.spec != devspecs.current_spec().name:
+                return None             # foreign spec: kept for translation
             del self._entries[key]      # stale: tuned on different hardware
             return None
         if entry.plan.d_w % (2 * spec.radius):
@@ -232,37 +266,76 @@ class PlanRegistry:
             word_bytes: int = 4, devices_x: int = 1, batch: int = 1,
             fingerprint: str | None = None,
             persist: bool = True) -> RegistryEntry:
-        """Record a tuned plan and (by default) write the file through."""
+        """Record a tuned plan and (by default) write the file through.
+
+        The entry records the active device-spec name alongside the
+        fingerprint, which is what later lets a different-spec process
+        recognize it as translatable rather than stale.
+        """
         entry = RegistryEntry(plan=_sanitize(plan), score=score,
                               source=source,
-                              fingerprint=fingerprint or hw.fingerprint(),
-                              evals=evals)
+                              fingerprint=fingerprint or devspecs.fingerprint(),
+                              evals=evals,
+                              spec=devspecs.current_spec().name)
         self._entries[plan_key(spec, grid_shape, word_bytes,
                                devices_x, batch)] = entry
         if persist:
             self.save()
         return entry
 
+    def foreign_entry(self, spec: StencilSpec, grid_shape,
+                      word_bytes: int = 4, devices_x: int = 1,
+                      batch: int = 1) -> RegistryEntry | None:
+        """The stored entry for this problem tuned under a DIFFERENT spec.
+
+        Returns None when the key is absent or the stored entry belongs to
+        the current spec (then `get` is the right accessor). The entry is
+        the raw foreign record — callers translate it via
+        `repro.compat.translate_entry` before trusting plan or score.
+        """
+        key = plan_key(spec, grid_shape, word_bytes, devices_x, batch)
+        entry = self._entries.get(key)
+        if entry is None or not entry.spec:
+            return None
+        if entry.spec == devspecs.current_spec().name:
+            return None
+        return entry
+
     def resolve(self, spec: StencilSpec, grid_shape, word_bytes: int = 4,
                 devices_x: int = 1, batch: int = 1,
-                chip: hw.ChipSpec = hw.V5E) -> tuple[MWDPlan, str]:
-        """Plan for the problem: registry-first, model-scored fallback.
+                chip: devspecs.DeviceSpec | None = None) -> tuple[MWDPlan, str]:
+        """Plan for the problem: registry-first, translated, model fallback.
 
         Returns `(plan, source)`; source is "registry:measured" or
-        "registry:model" on a cache hit (echoing how the entry was tuned)
-        and "model" for the analytic fallback (memoized per process, not
-        persisted — run `python -m repro.launch.tune` to tune and persist).
+        "registry:model" on a cache hit (echoing how the entry was tuned),
+        "translated:<spec>" when a plan tuned under a different device spec
+        was revalidated and rescaled for this one (zero re-measurement; see
+        `repro.compat.translate_entry`), and "model" for the analytic
+        fallback. Translated and model resolutions are memoized per process
+        but never persisted — run `python -m repro.launch.tune` to tune and
+        persist native entries.
 
         `batch` > 1 resolves under the batched ``b<B>`` key and scores the
         fallback with the batch-amortized dispatch model (`models`/
         `autotune`), so a batched serving bucket gets a plan tuned for ONE
         launch advancing B grids rather than replaying the B=1 optimum.
         """
+        chip = chip or devspecs.current_spec()
         entry = self.get(spec, grid_shape, word_bytes, devices_x, batch)
         if entry is not None:
             return entry.plan, f"registry:{entry.source}"
         key = plan_key(spec, grid_shape, word_bytes, devices_x, batch)
         if key not in self._memo:
+            foreign = self.foreign_entry(spec, grid_shape, word_bytes,
+                                         devices_x, batch)
+            if foreign is not None:
+                from repro import compat
+                translated = compat.translate_entry(
+                    foreign, spec, grid_shape, to_spec=chip,
+                    word_bytes=word_bytes, batch=batch)
+                if translated is not None:
+                    self._memo[key] = (translated.plan, translated.source)
+                    return self._memo[key]
             from repro.core import autotune
             # cap D_w at the y extent: a diamond wider than the domain only
             # inflates the launch padding, never the score
@@ -290,7 +363,7 @@ def default_registry() -> PlanRegistry:
 
 def resolve_plan(spec: StencilSpec, grid_shape, word_bytes: int = 4,
                  devices_x: int = 1, batch: int = 1,
-                 chip: hw.ChipSpec = hw.V5E) -> tuple[MWDPlan, str]:
+                 chip: devspecs.DeviceSpec | None = None) -> tuple[MWDPlan, str]:
     """Module-level convenience: `default_registry().resolve(...)`."""
     return default_registry().resolve(spec, grid_shape, word_bytes,
                                       devices_x, batch, chip)

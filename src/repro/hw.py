@@ -1,79 +1,29 @@
-"""Hardware constants for the TPU v5e target (per-chip).
+"""Back-compat hardware shim over the declarative device-spec layer.
 
-The container runs on CPU; these constants parameterize the roofline / ECM /
-energy models and the auto-tuner's VMEM-fit constraint. The three graded
-roofline terms use PEAK_FLOPS_BF16, HBM_BW and ICI_BW_PER_LINK exactly as given
-in the assignment brief.
+The machine model used to live here as a hard-coded ``ChipSpec`` literal;
+it is now declared in JSON spec files under ``specs/`` and loaded through
+`repro.core.specs` (schema validation, derived latency_bytes, per-spec
+memoized fingerprints). This module remains only so existing imports —
+``hw.ChipSpec``, ``hw.V5E``, ``hw.fingerprint()`` — keep working; new code
+should consume `repro.core.specs.get_spec` / `current_spec` directly.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import hashlib
-
-
-@dataclasses.dataclass(frozen=True)
-class ChipSpec:
-    """Per-chip hardware constants driving every analytic model."""
-
-    name: str
-    peak_flops_bf16: float      # MXU peak, FLOP/s
-    peak_flops_vpu_f32: float   # VPU vector f32 estimate (stencils are VPU work)
-    hbm_bw: float               # B/s, sustained
-    vmem_bw: float              # B/s, VMEM<->compute aggregate
-    ici_bw_per_link: float      # B/s per ICI link
-    ici_links: int              # usable links per chip (2D torus)
-    vmem_bytes: int             # software-managed fast memory per core
-    hbm_bytes: int
-    # Energy model constants (Fig. 19 analog). Rough public figures; the
-    # *relative* DRAM-vs-core split is what the paper's argument needs.
-    static_power_w: float       # chip package idle/static
-    joules_per_flop: float      # incremental core energy
-    joules_per_hbm_byte: float  # incremental HBM energy
-
-
-V5E = ChipSpec(
-    name="tpu-v5e",
-    peak_flops_bf16=197e12,
-    peak_flops_vpu_f32=9.8e12,   # estimate: 4 VPUs x 8x128 lanes x 2 FLOP x ~1.2GHz
-    hbm_bw=819e9,
-    vmem_bw=18e12,               # ~22x HBM; feeds the 8x128 VPU lanes
-    ici_bw_per_link=50e9,
-    ici_links=4,
-    vmem_bytes=128 * 2**20,
-    hbm_bytes=16 * 2**30,
-    static_power_w=90.0,
-    joules_per_flop=0.35e-12,
-    joules_per_hbm_byte=0.6e-9,
+from repro.core.specs import (  # noqa: F401  (re-exported compat surface)
+    DeviceSpec,
+    current_spec,
+    fingerprint,
+    get_spec,
 )
+
+#: Back-compat alias: every model function now types its machine-model
+#: argument as a `DeviceSpec`; old call sites constructed `ChipSpec`s.
+ChipSpec = DeviceSpec
+
+#: The paper-target machine model, loaded from ``specs/tpu-v5e.json``.
+V5E = get_spec("tpu-v5e")
 
 # Mesh geometry used throughout (see launch/mesh.py).
 POD_SHAPE = (16, 16)          # 256 chips per pod: ('data', 'model')
 MULTI_POD_SHAPE = (2, 16, 16)  # 512 chips: ('pod', 'data', 'model')
-
-
-def fingerprint(chip: ChipSpec = V5E) -> str:
-    """Stable hash of the hardware a tuned plan was measured on.
-
-    The tuned-plan registry (repro.core.registry) keys cached measurements by
-    this value: a plan tuned on one backend (CPU interpret mode, a different
-    TPU generation, a different device count) must not silently be reused on
-    another, so any change here invalidates every cached entry. The hash
-    covers the JAX backend + device kind + device count + jax version and the
-    chip model constants (which parameterize the analytic fallback scores).
-    """
-    import jax
-
-    devs = jax.devices()
-    parts = [
-        jax.__version__,
-        jax.default_backend(),
-        devs[0].device_kind if devs else "none",
-        str(len(devs)),
-        chip.name,
-        # model constants feed the analytic fallback score; retune if they move
-        f"{chip.peak_flops_vpu_f32:.3e}",
-        f"{chip.hbm_bw:.3e}",
-        f"{chip.vmem_bytes}",
-    ]
-    return hashlib.sha1("|".join(parts).encode()).hexdigest()[:16]

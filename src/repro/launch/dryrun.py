@@ -353,8 +353,15 @@ def main():
     ap.add_argument("--capacity-factor", type=float, default=0.0)
     ap.add_argument("--grad-dtype", default="")
     ap.add_argument("--list", action="store_true")
+    ap.add_argument("--spec", default=None,
+                    help="device spec name or spec-file path the roofline "
+                         "terms price against (default: $REPRO_DEVICE_SPEC "
+                         "or tpu-v5e)")
     args = ap.parse_args()
 
+    if args.spec:
+        from repro.core import specs as devspecs
+        devspecs.set_default_spec(args.spec)
     if args.op_module:
         import importlib
         importlib.import_module(args.op_module)

@@ -24,7 +24,7 @@ import re
 
 import numpy as np
 
-from repro import hw
+from repro.core import specs as devspecs
 from repro.core.models import RooflineTerms, roofline
 
 _DTYPE_BYTES = {
@@ -178,6 +178,7 @@ class DryrunResult:
             "t_memory": self.terms.t_memory,
             "t_memory_hlo": self.terms_hlo.t_memory,
             "t_collective": self.terms.t_collective,
+            "t_latency": self.terms.t_latency,
             "dominant": self.terms.dominant,
             "roofline_fraction": self.terms.roofline_fraction,
             "lower_s": self.lower_s, "compile_s": self.compile_s,
@@ -188,8 +189,13 @@ class DryrunResult:
 def analyze(compiled, *, arch: str, shape: str, mesh_name: str,
             n_devices: int, model_flops: float, model_bytes: float,
             lower_s: float, compile_s: float, notes: str = "",
-            chip: hw.ChipSpec = hw.V5E) -> DryrunResult:
-    """Extract the full roofline record from one compiled executable."""
+            chip: devspecs.DeviceSpec | None = None) -> DryrunResult:
+    """Extract the full roofline record from one compiled executable.
+
+    `chip=None` prices the terms against the process default device spec
+    (``--spec`` / ``$REPRO_DEVICE_SPEC``).
+    """
+    chip = chip or devspecs.current_spec()
     ca = compiled.cost_analysis()
     flops = float(ca.get("flops", 0.0))
     byts = float(ca.get("bytes accessed", 0.0))

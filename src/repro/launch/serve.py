@@ -497,6 +497,10 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--spec", default=None,
+                    help="device spec name or spec-file path plan "
+                         "resolution prices against (default: "
+                         "$REPRO_DEVICE_SPEC or tpu-v5e)")
     return ap
 
 
@@ -504,6 +508,9 @@ def main(argv=None):
     """CLI entry point: stencil request-queue server or LM decode loop."""
     args = build_parser().parse_args(argv)
 
+    if args.spec:
+        from repro.core import specs as devspecs
+        devspecs.set_default_spec(args.spec)
     if args.op_module:
         import importlib
         importlib.import_module(args.op_module)

@@ -47,8 +47,8 @@ import os
 import tempfile
 import time
 
-from repro import hw
 from repro.core import autotune, ir, models, precision, registry as reg
+from repro.core import specs as devspecs
 from repro.core import stencils as st
 from repro.core import traffic
 from repro.core.mwd import MWDPlan
@@ -140,16 +140,20 @@ class PointSpec:
 
 def model_point(spec: st.StencilSpec, grid, n_steps: int, plan: MWDPlan,
                 batch: int, word_bytes: int,
-                chip: hw.ChipSpec = hw.V5E) -> dict:
+                chip: devspecs.DeviceSpec | None = None) -> dict:
     """Model-side columns of one sweep point (no measurement).
 
     Returns the exact kernel DMA accounting (`repro.core.traffic`), the
     Eq. 5 idealized code balance, the ECM-TPU time/throughput prediction at
     the *exact* traffic (the implementation's true B/LUP, batch-amortized
-    for B > 1), and the Fig. 19 energy split at the predicted runtime.
+    for B > 1), the per-term ECM breakdown with the binding term named
+    (``ecm.dominant`` — "latency" for points under the spec's
+    ``latency_bytes`` crossover), and the Fig. 19 energy split at the
+    predicted runtime. `chip=None` resolves the process default spec.
     """
     import numpy as np
 
+    chip = chip or devspecs.current_spec()
     lups_item = float(np.prod(grid)) * n_steps
     lups = lups_item * batch
     tr = traffic.mwd_run_traffic(spec, grid, n_steps, plan.d_w, plan.n_f,
@@ -173,6 +177,14 @@ def model_point(spec: st.StencilSpec, grid, n_steps: int, plan: MWDPlan,
             "bc_spatial": models.spatial_code_balance(spec, word_bytes),
             "t_s": t_model,
             "glups": lups / t_model / 1e9,
+            "ecm": {
+                "t_compute": pred.t_compute,
+                "t_vmem": pred.t_vmem,
+                "t_hbm": pred.t_hbm,
+                "t_latency": pred.t_latency,
+                "dominant": pred.dominant,
+                "latency_bytes": chip.latency_bytes,
+            },
             "energy_j": {
                 "core": energy.core_j,
                 "hbm": energy.hbm_j,
@@ -230,7 +242,8 @@ def _scaling_model(ps: PointSpec, measured: dict) -> dict:
     device per super-step (`stepper.overlap_work` — both schedules sweep
     the same cells; only the exchange dependency differs), each swept cell
     streaming the operator's reads and one write through HBM. The model
-    t_s here is the a-priori v5e roofline of that work; the overlap-model
+    t_s here is the active device spec's roofline of that work; the
+    overlap-model
     residuals in the report are instead computed by the renderer from the
     recorded cell/halo columns, calibrated against the measured sync legs
     (`models.super_step_time`).
@@ -244,7 +257,7 @@ def _scaling_model(ps: PointSpec, measured: dict) -> dict:
     flops = ps.spec.flops_per_lup * cells_dev * n_super * n_dev
     hbm_bytes = ((ps.spec.n_streams + 1) * ps.word_bytes
                  * cells_dev * n_super * n_dev)
-    chip = hw.V5E
+    chip = devspecs.current_spec()
     t_model = n_super * max(
         ps.spec.flops_per_lup * cells_dev / chip.peak_flops_vpu_f32,
         (ps.spec.n_streams + 1) * ps.word_bytes * cells_dev / chip.hbm_bw)
@@ -513,7 +526,8 @@ def run_point(ps: PointSpec, registry: reg.PlanRegistry, *, reps: int,
         "plan": dataclasses.asdict(plan) if plan is not None else None,
         "plan_source": plan_source,
         "measured": measured,
-        "hw_fingerprint": hw.fingerprint(),
+        "spec": devspecs.current_spec().name,
+        "hw_fingerprint": devspecs.fingerprint(),
     }
     point.update(modeled)
     return point
@@ -708,8 +722,14 @@ def main(argv=None) -> dict:
     ap.add_argument("--expect-cached", action="store_true",
                     help="exit 1 if any point had to be measured (CI gate "
                          "that a finished sweep resumes to zero work)")
+    ap.add_argument("--spec", type=str, default=None,
+                    help="device spec name or spec-file path the model "
+                         "columns price against (default: "
+                         f"$REPRO_DEVICE_SPEC or {devspecs.DEFAULT_SPEC_NAME})")
     args = ap.parse_args(argv)
 
+    if args.spec:
+        devspecs.set_default_spec(args.spec)
     if args.op_module:
         import importlib
         importlib.import_module(args.op_module)
@@ -764,11 +784,17 @@ def run_sweep_points(points, *, registry: reg.PlanRegistry,
                      results_path: str, resume: bool = True, reps: int = 2,
                      warmup: int = 1, tune: str = "none",
                      verbose: bool = True) -> dict:
-    """`run_sweep` over an explicit, pre-built point list (smoke profile)."""
+    """`run_sweep` over an explicit, pre-built point list (smoke profile).
+
+    Besides the per-point records, a finished run re-fits the ECM
+    calibration over every single-launch point in the file and persists it
+    as the per-spec artifact ``<results dir>/ecm-<spec>.json``
+    (`models.save_calibration`) whenever at least three such points exist.
+    """
     results = load_results(results_path)
-    results["hw_fingerprint"] = hw.fingerprint()
+    results["hw_fingerprint"] = devspecs.fingerprint()
     done = done_keys(results_path) if resume else {}
-    fp = hw.fingerprint()
+    fp = devspecs.fingerprint()
     n_measured = n_skipped = 0
     t0 = time.perf_counter()
     for ps in points:
@@ -789,12 +815,20 @@ def run_sweep_points(points, *, registry: reg.PlanRegistry,
     summary = {"n_measured": n_measured, "n_skipped": n_skipped,
                "seconds": time.perf_counter() - t0,
                "results_path": results_path, "points": results["points"]}
+    calib_pts = [(p["flops"], p["traffic"]["hbm_bytes"],
+                  p["measured"]["t_s"])
+                 for p in results["points"].values()
+                 if not p.get("distributed")]
+    if len(calib_pts) >= 3:
+        calib = models.fit_ecm(calib_pts)
+        summary["calibration_path"] = models.save_calibration(
+            calib, os.path.dirname(results_path) or ".")
     if verbose:
-        calib = calibration_summary(results["points"].values())
+        calib_line = calibration_summary(results["points"].values())
         print(f"# {n_measured} measured, {n_skipped} cached -> "
               f"{results_path} ({summary['seconds']:.1f}s); "
-              f"registry {registry.stats()}" + (f"; fit {calib}" if calib
-                                                else ""))
+              f"registry {registry.stats()}"
+              + (f"; fit {calib_line}" if calib_line else ""))
     return summary
 
 

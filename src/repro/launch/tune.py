@@ -22,8 +22,8 @@ from __future__ import annotations
 import argparse
 import time
 
-from repro import hw
 from repro.core import autotune, ir, precision, registry as reg
+from repro.core import specs as devspecs
 from repro.core import stencils as st
 
 
@@ -127,8 +127,18 @@ def main(argv=None) -> list[dict]:
                     help="time steps each measured launch advances")
     ap.add_argument("--force", action="store_true",
                     help="re-tune even on a registry hit")
+    ap.add_argument("--spec", type=str, default=None,
+                    help="device spec name or spec-file path the models "
+                         "price against (default: $REPRO_DEVICE_SPEC or "
+                         f"{devspecs.DEFAULT_SPEC_NAME})")
+    ap.add_argument("--expect-cached", action="store_true",
+                    help="fail (exit 3) if any stencil performed a "
+                         "measurement — CI uses this to prove a warmed "
+                         "registry resolves with zero re-measurement")
     args = ap.parse_args(argv)
 
+    if args.spec:
+        devspecs.set_default_spec(args.spec)
     if args.op_module:
         import importlib
         importlib.import_module(args.op_module)
@@ -138,7 +148,9 @@ def main(argv=None) -> list[dict]:
     grid = (tuple(int(x) for x in args.grid.split(",")) if args.grid
             else None)
 
-    print(f"# registry={registry.path} fingerprint={hw.fingerprint()}")
+    print(f"# registry={registry.path} "
+          f"spec={devspecs.current_spec().name} "
+          f"fingerprint={devspecs.fingerprint()}")
     print("stencil,source,plan,score_GLUPs,measurements,evals,seconds")
     reports = []
     for spec in specs:
@@ -154,6 +166,12 @@ def main(argv=None) -> list[dict]:
               f"{r['score']:.3f},{r['measurements']},{r['evals']},"
               f"{r['seconds']:.1f}")
         reports.append(r)
+    if args.expect_cached and any(r["measurements"] for r in reports):
+        import sys
+        hot = [r["stencil"] for r in reports if r["measurements"]]
+        print(f"--expect-cached: measurements performed for {hot} "
+              f"(registry miss or stale fingerprint)", file=sys.stderr)
+        raise SystemExit(3)
     return reports
 
 
