@@ -538,6 +538,59 @@ def soak():
          f"thr_ratio={ratio:.2f}x;report={report_path}")
 
 
+def adjoint_fit():
+    """Inverse-problem gate: gradcheck + a seeded coefficient fit.
+
+    (a) the custom_vjp backward pass of the fused launch matches `jax.grad`
+    of the naive oracle for a 1st- and a 2nd-order paper op (reporting the
+    forward and backward wall clock — backward/forward is the adjoint's
+    cost ratio, cf. the adjoint-traffic note in docs/MODEL.md); (b) a short
+    `launch.fit` run on 7pt-var must cut the observation loss >= 10x —
+    the same seeded smoke gate CI runs at full budget.
+    """
+    from repro.core import stencils as stc
+    from repro.launch import fit as fitmod
+
+    for name in ("7pt-var", "25pt-const"):
+        spec = st.SPECS[name]
+        shape = (8, 12, 10) if spec.radius == 1 else (14, 20, 16)
+        d_w = 4 if spec.radius == 1 else 8
+        state, coeffs = st.make_problem(spec, shape, seed=0)
+        arrays, scalars = ir.split_coeffs(spec, coeffs)
+        scalars = tuple(float(x) for x in scalars)
+        w = jnp.asarray(np.random.default_rng(1).standard_normal(shape),
+                        jnp.float32)
+
+        def loss(fn, arr):
+            out = fn(spec, state, ir.join_coeffs(spec, arr, scalars), 2,
+                     d_w=d_w, n_f=2)
+            return jnp.sum(out[0] * w)
+
+        g_ref = jax.grad(lambda a: loss(
+            lambda s, st_, c, n, **k: stc.run_naive(s, st_, c, n), a))(
+            arrays)
+        us_f = _t(lambda: jax.block_until_ready(
+            loss(ops.mwd_diff, arrays)), reps=1)
+        gfn = jax.jit(jax.grad(lambda a: loss(ops.mwd_diff, a)))
+        us_b = _t(lambda: jax.block_until_ready(gfn(arrays)), reps=1)
+        g_got = gfn(arrays)
+        err = float(jnp.max(jnp.abs(g_ref - g_got)))
+        scale = float(jnp.max(jnp.abs(g_ref))) or 1.0
+        assert err <= 1e-4 * scale, \
+            f"adjoint gradcheck failed for {name}: {err} vs scale {scale}"
+        _row(f"adjoint.{name}", us_b,
+             f"grad_err={err:.1e};fwd_us={us_f:.0f};"
+             f"bwd_over_fwd={us_b/us_f:.2f}x")
+
+    rep = fitmod.run_fit(st.SPECS["7pt-var"], (8, 12, 10), n_steps=2,
+                         windows=2, seed=0, max_steps=40, telemetry="")
+    assert rep["reduction"] >= 10.0, \
+        f"fit gate: only {rep['reduction']:.1f}x loss reduction"
+    _row("adjoint.fit.7pt-var", rep["seconds"] * 1e6,
+         f"loss0={rep['loss0']:.2e};loss={rep['loss']:.2e};"
+         f"reduction={rep['reduction']:.0f}x;steps={rep['steps']}")
+
+
 def lm_substrate():
     from repro import configs
     from repro.models import lm
@@ -570,6 +623,7 @@ BENCHES = {
     "custom_stencil": custom_stencil,
     "batched_serving": batched_serving,
     "soak": soak,
+    "adjoint_fit": adjoint_fit,
     "lm_substrate": lm_substrate,
 }
 

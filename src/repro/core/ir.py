@@ -261,6 +261,22 @@ class StencilOp:
         k = 4.0 * (len(self.taps) + (4 if self.time_order == 2 else 0))
         return (k * eps, k * eps)
 
+    # -- structural adjoint -------------------------------------------------
+
+    def adjoint(self) -> "Adjoint":
+        """The adjoint operator of this op's sweep, derived structurally.
+
+        The sweep is linear in the solution levels, so its transpose is
+        itself a stencil op over the same diamond-tessellation geometry:
+        every tap's offset is negated, and a variable coefficient read at
+        the *output* cell of the forward tap becomes a coefficient read at
+        the *input* cell of the adjoint tap — realized as a shifted copy of
+        the forward coefficient stream (`Adjoint.map_coeffs`), so the
+        adjoint lowers through the unmodified kernels.  See `adjoint` for
+        the derivation; the result is cached per op.
+        """
+        return adjoint(self)
+
     # -- identity -----------------------------------------------------------
 
     @property
@@ -330,6 +346,126 @@ def make_sweep(op: StencilOp):
         return cur.at[r:-r, r:-r, r:-r].set(acc)
 
     return sweep
+
+
+# ---------------------------------------------------------------------------
+# Structural adjoint: the transpose of the sweep is another StencilOp
+# ---------------------------------------------------------------------------
+#
+# The generated sweep is linear in the solution levels:
+#
+#   1st order:  out[i] = sum_t  c_t(i) * cur[i + off_t]
+#   2nd order:  out[i] = 2*cur[i] - prev[i] + s(i) * sum_t c_t(i)*cur[i+off_t]
+#
+# Transposing the tap sum L: the cotangent flowing into cur[j] from output
+# cell i = j - off_t is weighted by c_t(i) — the coefficient is evaluated at
+# the forward OUTPUT cell, i.e. at offset -off_t from the adjoint's output
+# cell j.  So the adjoint is a stencil with taps at the negated offsets
+# whose coefficients are:
+#
+#   * the same compile-time scalar when c_t is const and the 2nd-order
+#     scale is const/absent (constants are translation-invariant — a
+#     symmetric constant-coefficient stencil is literally self-adjoint);
+#   * a SHIFTED copy of the forward stream otherwise:
+#     c'_t[j] = (w_t)[j - off_t] with w_t the product of the tap's array
+#     stream and (when the scale is an array) the scale stream — built by
+#     `Adjoint.map_coeffs` as one jnp.roll per adjoint slot.  Wrap-around
+#     values only land where the multiplied cotangent is zero (outside the
+#     interior), so roll is exact.
+#
+# The 2nd-order recurrence transposes to ITSELF over the adjoint taps (the
+# classic self-adjointness of the leapfrog integrator, modulo a sign flip
+# of the previous-level cotangent that `repro.kernels.adjoint` applies to
+# the state), which is what lets the wave-equation backward pass reuse the
+# unmodified time_order=2 MWD kernel.
+
+
+@dataclasses.dataclass(frozen=True)
+class AdjointSlot:
+    """Recipe for one adjoint coefficient stream (one forward tap).
+
+    ``stream[j] = roll(prod(arrays[k] for k) * prod(scalars[i] for i),
+    shift)`` — `shift` is the FORWARD tap offset (roll by +off realizes the
+    evaluation at ``j - off``).
+    """
+
+    shift: tuple[int, int, int]
+    arrays: tuple[int, ...]         # forward array slots multiplied in
+    scalars: tuple[int, ...]        # forward const slots multiplied in
+
+
+@dataclasses.dataclass(frozen=True)
+class Adjoint:
+    """A derived adjoint operator plus its coefficient transport.
+
+    `op` is an ordinary `StencilOp` — it lowers through every kernel,
+    auto-tunes, and registers plans like any user operator (the gradient
+    launches key the plan registry on it under a ``vjp`` variant).
+    `map_coeffs` turns the FORWARD canonical coefficients into the
+    adjoint's, per the slot recipes above.
+    """
+
+    op: StencilOp
+    slots: tuple[AdjointSlot, ...]
+    keep_scalars: bool              # adjoint reuses the forward scalar tuple
+
+    def map_coeffs(self, arrays, scalars):
+        """Forward canonical ``(arrays, scalars)`` -> the adjoint's.
+
+        `arrays` is the stacked forward stream (optionally with leading
+        batch axes); scalars a tuple of concrete floats.  Pure jnp — cheap
+        (one roll per slot) and safe to call inside jit/scan.
+        """
+        import jax.numpy as jnp
+
+        adj_scalars = tuple(scalars) if self.keep_scalars else ()
+        if not self.slots:
+            return None, adj_scalars
+        streams = []
+        for slot in self.slots:
+            w = None
+            for k in slot.arrays:
+                a = arrays[..., k, :, :, :]
+                w = a if w is None else w * a
+            factor = 1.0
+            for i in slot.scalars:
+                factor = factor * float(scalars[i])
+            w = w * factor if factor != 1.0 else w
+            streams.append(jnp.roll(w, slot.shift, axis=(-3, -2, -1)))
+        return jnp.stack(streams, axis=-4), adj_scalars
+
+
+@functools.lru_cache(maxsize=None)
+def adjoint(op: StencilOp) -> Adjoint:
+    """Derive the adjoint of `op`'s sweep (see the module comment above).
+
+    The adjoint op is named ``<name>.T`` (never registered); its structural
+    fingerprint keys gradient-launch plans so they can share nothing with
+    the forward entries even before the registry's ``vjp`` variant suffix.
+    """
+    fold = op.scale is not None and op.scale.kind == "array"
+    taps: list[Tap] = []
+    slots: list[AdjointSlot] = []
+    keep_scalars = False
+    for t in op.taps:
+        off = (-t.dz, -t.dy, -t.dx)
+        if t.coeff.kind == "const" and not fold:
+            taps.append(Tap(*off, const(t.coeff.index)))
+            keep_scalars = True
+            continue
+        arrays = (t.coeff.index,) if t.coeff.kind == "array" else ()
+        consts = (t.coeff.index,) if t.coeff.kind == "const" else ()
+        if fold:
+            arrays += (op.scale.index,)
+        slots.append(AdjointSlot(t.offset, arrays, consts))
+        taps.append(Tap(*off, array(len(slots) - 1)))
+    scale = None
+    if op.time_order == 2 and not fold:
+        scale = op.scale                # const scale carries over verbatim
+        keep_scalars = keep_scalars or scale is not None
+    adj_op = StencilOp(f"{op.name}.T", tuple(taps), time_order=op.time_order,
+                       scale=scale, coeff_scale=op.coeff_scale)
+    return Adjoint(op=adj_op, slots=tuple(slots), keep_scalars=keep_scalars)
 
 
 # ---------------------------------------------------------------------------

@@ -66,8 +66,12 @@ def default_grid(spec: StencilSpec) -> tuple[int, int, int]:
     return (10, 18, 14) if spec.radius == 1 else (12, 26, 18)
 
 
+VARIANTS = ("", "vjp")
+
+
 def plan_key(spec: StencilSpec, grid_shape, word_bytes: int = 4,
-             devices_x: int = 1, batch: int = 1) -> str:
+             devices_x: int = 1, batch: int = 1,
+             variant: str = "") -> str:
     """Registry key of one tuning problem (hw fingerprint lives in the entry).
 
     The stencil segment is ``name@<structural fingerprint>`` so two
@@ -81,6 +85,13 @@ def plan_key(spec: StencilSpec, grid_shape, word_bytes: int = 4,
     for B resident grids (the dispatch amortization shifts the optimum), so
     batched entries must never collide with B=1 entries.  Legacy keys
     without the segment are upgraded to ``b1`` at load (`_load`).
+
+    `variant` distinguishes derived launches of the same operator that
+    want their own tuned plan: gradient (backward) launches resolve under
+    ``variant="vjp"``, appending a trailing ``|vjp`` segment, so a tuned
+    adjoint plan never collides with the forward entry even when a future
+    caller keys both on the same op.  The empty variant (forward) appends
+    nothing, keeping every pre-existing key byte-identical.
     """
     if isinstance(spec, str):
         raise TypeError("plan_key needs a StencilOp (a bare name has no "
@@ -88,9 +99,13 @@ def plan_key(spec: StencilSpec, grid_shape, word_bytes: int = 4,
                         "repro.core.ir.resolve_op first")
     if batch < 1:
         raise ValueError(f"batch must be >= 1, got {batch}")
+    if variant not in VARIANTS:
+        raise ValueError(f"unknown plan variant {variant!r}; "
+                         f"known: {[v for v in VARIANTS if v]}")
     nz, ny, nx = grid_shape
-    return f"{spec.name}@{spec.fingerprint}|{nz}x{ny}x{nx}|w{word_bytes}" \
-           f"|dx{devices_x}|b{batch}"
+    key = f"{spec.name}@{spec.fingerprint}|{nz}x{ny}x{nx}|w{word_bytes}" \
+          f"|dx{devices_x}|b{batch}"
+    return f"{key}|{variant}" if variant else key
 
 
 @dataclasses.dataclass(frozen=True)
@@ -173,10 +188,12 @@ class PlanRegistry:
             if "@" not in key.split("|", 1)[0]:
                 continue            # legacy name-only key (pre-IR schema):
                                     # no fingerprint -> silently invalidated
-            tail = key.rsplit("|", 1)[-1]
-            if not (tail.startswith("b") and tail[1:].isdigit()):
-                key += "|b1"        # pre-batch schema: a key without the
+            parts = key.split("|")
+            variant = parts.pop() if parts[-1] in VARIANTS[1:] else ""
+            if not (parts[-1].startswith("b") and parts[-1][1:].isdigit()):
+                parts.append("b1")  # pre-batch schema: a key without the
                                     # b<B> segment is a single-grid plan
+            key = "|".join(parts + ([variant] if variant else []))
             try:
                 self._entries[key] = RegistryEntry.from_dict(d)
             except (ValueError, KeyError, TypeError):
@@ -240,13 +257,15 @@ class PlanRegistry:
 
     def get(self, spec: StencilSpec, grid_shape, word_bytes: int = 4,
             devices_x: int = 1, batch: int = 1,
-            fingerprint: str | None = None) -> RegistryEntry | None:
+            fingerprint: str | None = None,
+            variant: str = "") -> RegistryEntry | None:
         """Cached entry for the problem, or None on miss / stale fingerprint.
 
         A stale entry (recorded fingerprint != the current one) is removed
         from the in-memory map so the next `save()` prunes it from disk.
         """
-        key = plan_key(spec, grid_shape, word_bytes, devices_x, batch)
+        key = plan_key(spec, grid_shape, word_bytes, devices_x, batch,
+                       variant)
         entry = self._entries.get(key)
         if entry is None:
             return None
@@ -264,7 +283,7 @@ class PlanRegistry:
     def put(self, spec: StencilSpec, grid_shape, plan: MWDPlan,
             score: float, *, source: str = "measured", evals: int = 0,
             word_bytes: int = 4, devices_x: int = 1, batch: int = 1,
-            fingerprint: str | None = None,
+            fingerprint: str | None = None, variant: str = "",
             persist: bool = True) -> RegistryEntry:
         """Record a tuned plan and (by default) write the file through.
 
@@ -278,14 +297,14 @@ class PlanRegistry:
                               evals=evals,
                               spec=devspecs.current_spec().name)
         self._entries[plan_key(spec, grid_shape, word_bytes,
-                               devices_x, batch)] = entry
+                               devices_x, batch, variant)] = entry
         if persist:
             self.save()
         return entry
 
     def foreign_entry(self, spec: StencilSpec, grid_shape,
                       word_bytes: int = 4, devices_x: int = 1,
-                      batch: int = 1) -> RegistryEntry | None:
+                      batch: int = 1, variant: str = "") -> RegistryEntry | None:
         """The stored entry for this problem tuned under a DIFFERENT spec.
 
         Returns None when the key is absent or the stored entry belongs to
@@ -293,7 +312,8 @@ class PlanRegistry:
         the raw foreign record — callers translate it via
         `repro.compat.translate_entry` before trusting plan or score.
         """
-        key = plan_key(spec, grid_shape, word_bytes, devices_x, batch)
+        key = plan_key(spec, grid_shape, word_bytes, devices_x, batch,
+                       variant)
         entry = self._entries.get(key)
         if entry is None or not entry.spec:
             return None
@@ -303,7 +323,8 @@ class PlanRegistry:
 
     def resolve(self, spec: StencilSpec, grid_shape, word_bytes: int = 4,
                 devices_x: int = 1, batch: int = 1,
-                chip: devspecs.DeviceSpec | None = None) -> tuple[MWDPlan, str]:
+                chip: devspecs.DeviceSpec | None = None,
+                variant: str = "") -> tuple[MWDPlan, str]:
         """Plan for the problem: registry-first, translated, model fallback.
 
         Returns `(plan, source)`; source is "registry:measured" or
@@ -321,13 +342,15 @@ class PlanRegistry:
         launch advancing B grids rather than replaying the B=1 optimum.
         """
         chip = chip or devspecs.current_spec()
-        entry = self.get(spec, grid_shape, word_bytes, devices_x, batch)
+        entry = self.get(spec, grid_shape, word_bytes, devices_x, batch,
+                         variant=variant)
         if entry is not None:
             return entry.plan, f"registry:{entry.source}"
-        key = plan_key(spec, grid_shape, word_bytes, devices_x, batch)
+        key = plan_key(spec, grid_shape, word_bytes, devices_x, batch,
+                       variant)
         if key not in self._memo:
             foreign = self.foreign_entry(spec, grid_shape, word_bytes,
-                                         devices_x, batch)
+                                         devices_x, batch, variant)
             if foreign is not None:
                 from repro import compat
                 translated = compat.translate_entry(
@@ -363,7 +386,8 @@ def default_registry() -> PlanRegistry:
 
 def resolve_plan(spec: StencilSpec, grid_shape, word_bytes: int = 4,
                  devices_x: int = 1, batch: int = 1,
-                 chip: devspecs.DeviceSpec | None = None) -> tuple[MWDPlan, str]:
+                 chip: devspecs.DeviceSpec | None = None,
+                 variant: str = "") -> tuple[MWDPlan, str]:
     """Module-level convenience: `default_registry().resolve(...)`."""
     return default_registry().resolve(spec, grid_shape, word_bytes,
-                                      devices_x, batch, chip)
+                                      devices_x, batch, chip, variant)

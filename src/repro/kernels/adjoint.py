@@ -1,0 +1,551 @@
+"""Differentiable MWD launches: a structural `jax.custom_vjp` adjoint.
+
+The fused MWD advance is linear in the solution levels, so its vector-
+Jacobian product is itself a stencil advance — the adjoint operator derived
+structurally by `repro.core.ir.adjoint` (tap offsets negated, variable
+coefficients transported as rolled streams) — running through the SAME
+single-`pallas_call` machinery as the forward pass.  Autodiff through the
+pallas kernel would instead checkpoint every intermediate grid and replay
+the schedule with a naively transposed tape, destroying the paper's
+arithmetic-intensity win; here the backward pass is one adjoint MWD launch
+per time step plus O(surface) frame bookkeeping.
+
+One-step pullback (state ``(cur, prev) -> (new, cur)``; ``G``/``P`` the
+cotangents on the two outputs, ``Ĝ`` = interior-masked ``G``, ``1_F`` the
+Dirichlet-frame indicator, ``Ã`` the adjoint tap application):
+
+* 1st order::
+
+      g_cur  = Ã(Ĝ) + G·1_F + P          g_prev = 0
+
+* 2nd order (``new = 2·cur - prev + s·L(cur)`` in the interior)::
+
+      g_cur  = 2·Ĝ + Ã(Ĝ) + G·1_F + P    g_prev = -Ĝ
+
+  The 2nd-order recurrence transposes to ITSELF over the adjoint taps, so
+  the interior of ``g_cur`` is exactly one time_order=2 MWD step of the
+  adjoint op on the state ``(Ĝ, -P)``; only the frame accumulation
+  (`_frame_shell`, O(surface·R) work on six disjoint boundary slabs) and
+  the passthrough terms are added outside the kernel.
+
+Residual policy (what the forward saves for the backward):
+
+* 2nd order: the two output levels only — earlier states are RECONSTRUCTED
+  by running the time-symmetric integrator backwards
+  (``U_{t-2} = 2·U_{t-1} - U_t + s·L(U_{t-1})`` = the forward kernel on the
+  swapped state), so peak backward memory is O(1) in step count.
+* 1st order, constant coefficients: nothing (the pullback needs no states).
+* 1st order, variable coefficients: the per-step input states, stacked by a
+  scan of 1-step launches (bitwise-equal to the fused N-step advance, which
+  the MWD == naive pinning guarantees) — the coefficient gradient
+  ``dL/dc_t[i] = Ĝ[i]·pre(i)·cur_in[i+off_t]`` needs them, and a 1st-order
+  advance is not reversible.
+
+Compile-time scalar coefficients are baked into the kernels as immediates
+(static), so they are NOT differentiable — only the solution levels and the
+stacked per-cell coefficient streams carry gradients.
+
+Gradient launches resolve their plan registry-first under the ``vjp``
+variant key (`resolve_adjoint_plan`), keyed on the ADJOINT operator's own
+structural fingerprint; a miss falls back to the analytic model score of
+the adjoint op (which has more streams than the forward — every transported
+coefficient becomes its own rolled stream).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ir, precision
+from repro.core.mwd import MWDPlan
+from repro.core.stencils import StencilSpec
+from repro.kernels import stencil_mwd
+
+__all__ = ["mwd_diff", "mwd_diff_batched", "resolve_adjoint_plan",
+           "distributed_vjp"]
+
+
+# ---------------------------------------------------------------------------
+# trailing-axis helpers (a leading batch axis passes through everything)
+# ---------------------------------------------------------------------------
+
+def _core(a, r):
+    return a[..., r:-r, r:-r, r:-r]
+
+
+def _zero_frame(a, r):
+    """Keep the interior of `a`, zero the Dirichlet frame."""
+    return jnp.zeros_like(a).at[..., r:-r, r:-r, r:-r].set(_core(a, r))
+
+
+def _frame_only(a, r):
+    """Keep the Dirichlet frame of `a`, zero the interior."""
+    return a.at[..., r:-r, r:-r, r:-r].set(0)
+
+
+def _shift3(a, off, r):
+    """Interior-shaped slice of `a` displaced by `off` (the sweep's shift)."""
+    sl = tuple(slice(r + d, d - r if d - r else None) for d in off)
+    return a[(...,) + sl]
+
+
+def _slot(arrays, k):
+    """Stream `k` of a stacked coefficient array (batch axes pass through)."""
+    return arrays[..., k, :, :, :]
+
+
+def _block(a, lo, hi):
+    """``a[lo:hi]`` on the trailing 3 axes, zero-padded where the range
+    leaves the domain (so taps can read "outside" as zeros)."""
+    sl, pads = [], []
+    for ax, (l, h) in enumerate(zip(lo, hi)):
+        n = a.shape[a.ndim - 3 + ax]
+        sl.append(slice(max(l, 0), min(h, n)))
+        pads.append((max(0, -l), max(0, h - n)))
+    return jnp.pad(a[(...,) + tuple(sl)], [(0, 0)] * (a.ndim - 3) + pads)
+
+
+def _tap_sum(op: StencilSpec, cur, arrays, scalars):
+    """Interior-shaped ``L(cur)``: the op's coefficient-weighted tap sum."""
+    r = op.radius
+    acc = None
+    for coeff, taps in op.groups:
+        s = None
+        for t in taps:
+            v = _shift3(cur, t.offset, r)
+            s = v if s is None else s + v
+        c = (scalars[coeff.index] if coeff.kind == "const"
+             else _core(_slot(arrays, coeff.index), r))
+        term = c * s
+        acc = term if acc is None else acc + term
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# frame accumulation: the adjoint writes into the Dirichlet frame
+# ---------------------------------------------------------------------------
+#
+# The MWD kernel holds the frame fixed (Dirichlet), but the TRUE adjoint of
+# the interior update accumulates into frame cells too: a frame cell j
+# receives sum_t c'_t[j] * Ĝ[j + off'_t] whenever an interior output cell
+# reads it.  Only the tap-sum part lands there — the 2nd-order leapfrog
+# terms (2·cur - prev) are interior-only — so the correction is the plain
+# adjoint tap application restricted to the frame.
+
+def _tap_apply_full(adj: ir.Adjoint, adj_arrays, adj_scalars, g):
+    """Full-volume adjoint tap application (reference for `_frame_shell`).
+
+    ``out[j] = s' * sum_t c'_t[j] * g[j + off'_t]`` with ``g`` read as zero
+    outside the domain; ``s'`` is the carried 2nd-order const scale (array
+    scales were folded into the streams by `ir.adjoint`).  O(volume) — the
+    hot path uses `_frame_shell` instead and a property test pins the two
+    equal on the frame.
+    """
+    op = adj.op
+    r = op.radius
+    shape = g.shape[-3:]
+    gp = jnp.pad(g, [(0, 0)] * (g.ndim - 3) + [(r, r)] * 3)
+
+    def shift(off):
+        sl = tuple(slice(r + d, r + d + n) for d, n in zip(off, shape))
+        return gp[(...,) + sl]
+
+    acc = None
+    for coeff, taps in op.groups:
+        s = None
+        for t in taps:
+            v = shift(t.offset)
+            s = v if s is None else s + v
+        c = (adj_scalars[coeff.index] if coeff.kind == "const"
+             else _slot(adj_arrays, coeff.index))
+        term = c * s
+        acc = term if acc is None else acc + term
+    if op.scale is not None:            # 2nd-order const scale (never array)
+        acc = acc * adj_scalars[op.scale.index]
+    return acc
+
+
+def _frame_shell(adj: ir.Adjoint, adj_arrays, adj_scalars, g):
+    """Adjoint tap application restricted to the frame: O(surface·R) work.
+
+    Computes `_tap_apply_full` on six disjoint boundary slabs (z faces at
+    full y×x extent, y faces z-restricted, x faces z,y-restricted), each via
+    a zero-padded context block of thickness ~3R, and scatters the results
+    into an otherwise-zero volume.
+    """
+    op = adj.op
+    r = op.radius
+    nz, ny, nx = g.shape[-3:]
+    regions = (((0, r), (0, ny), (0, nx)),
+               ((nz - r, nz), (0, ny), (0, nx)),
+               ((r, nz - r), (0, r), (0, nx)),
+               ((r, nz - r), (ny - r, ny), (0, nx)),
+               ((r, nz - r), (r, ny - r), (0, r)),
+               ((r, nz - r), (r, ny - r), (nx - r, nx)))
+    out = jnp.zeros_like(g)
+    for (z0, z1), (y0, y1), (x0, x1) in regions:
+        shape = (z1 - z0, y1 - y0, x1 - x0)
+        ctx = _block(g, (z0 - r, y0 - r, x0 - r), (z1 + r, y1 + r, x1 + r))
+
+        def shift(off):
+            sl = tuple(slice(r + d, r + d + n)
+                       for d, n in zip(off, shape))
+            return ctx[(...,) + sl]
+
+        reg = (..., slice(z0, z1), slice(y0, y1), slice(x0, x1))
+        acc = None
+        for coeff, taps in op.groups:
+            s = None
+            for t in taps:
+                v = shift(t.offset)
+                s = v if s is None else s + v
+            c = (adj_scalars[coeff.index] if coeff.kind == "const"
+                 else _slot(adj_arrays, coeff.index)[reg])
+            term = c * s
+            acc = term if acc is None else acc + term
+        if op.scale is not None:
+            acc = acc * adj_scalars[op.scale.index]
+        out = out.at[reg].set(acc)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# coefficient-stream gradients
+# ---------------------------------------------------------------------------
+
+def _coeff_grads(op: StencilSpec, cur_in, ghat, arrays, scalars):
+    """One step's gradient wrt the stacked coefficient streams (zero frame).
+
+    ``dL/dc_k[i] = Ĝ[i] · pre(i) · sum_{taps with array(k)} cur_in[i+off]``
+    with ``pre`` the 2nd-order scale (1 for 1st order); an array-valued
+    scale slot additionally receives ``Ĝ · L(cur_in)``.  Coefficients are
+    read at interior output cells only, so the frame rows stay zero.
+    """
+    if arrays is None:
+        return None
+    r = op.radius
+    g = _core(ghat, r)
+    pre = g
+    if op.time_order == 2 and op.scale is not None:
+        s = (scalars[op.scale.index] if op.scale.kind == "const"
+             else _core(_slot(arrays, op.scale.index), r))
+        pre = g * s
+    by_slot: dict[int, object] = {}
+    for coeff, taps in op.groups:
+        if coeff.kind != "array":
+            continue
+        ssum = None
+        for t in taps:
+            v = _shift3(cur_in, t.offset, r)
+            ssum = v if ssum is None else ssum + v
+        by_slot[coeff.index] = pre * ssum
+    if (op.time_order == 2 and op.scale is not None
+            and op.scale.kind == "array"):
+        k = op.scale.index
+        term = g * _tap_sum(op, cur_in, arrays, scalars)
+        by_slot[k] = by_slot[k] + term if k in by_slot else term
+    out = jnp.zeros_like(arrays)
+    for k, v in by_slot.items():
+        out = out.at[..., k, r:-r, r:-r, r:-r].set(v)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the custom_vjp core (cached per static configuration)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _diff_core(op: StencilSpec, scalars, n_steps: int, fwd_plan, adj_plan,
+               acc_dtype, batched: bool):
+    """Build the jitted `custom_vjp` advance for one static configuration.
+
+    `fwd_plan` / `adj_plan` are ``(d_w, n_f, fused)`` triples for the
+    forward and gradient launches; `scalars` the static float tuple the
+    kernels inline.  Returns ``advance(cur, prev, arrays) -> (cur', prev')``.
+    """
+    adj = ir.adjoint(op)
+    run = stencil_mwd.mwd_run_batched if batched else stencil_mwd.mwd_run
+    r = op.radius
+    fdw, fnf, ffu = fwd_plan
+    adw, anf, afu = adj_plan
+    has_arrays = op.n_coeff_arrays > 0
+
+    def fwd_run(state, arrays, steps):
+        return run(op, state, arrays, scalars, steps,
+                   d_w=fdw, n_f=fnf, fused=ffu, acc_dtype=acc_dtype)
+
+    def adj_run(state, adj_arrays, adj_scalars):
+        return run(adj.op, state, adj_arrays, adj_scalars, 1,
+                   d_w=adw, n_f=anf, fused=afu, acc_dtype=acc_dtype)
+
+    @jax.custom_vjp
+    def advance(cur, prev, arrays):
+        return fwd_run((cur, prev), arrays, n_steps)
+
+    def fwd(cur, prev, arrays):
+        if op.time_order == 2:
+            out = fwd_run((cur, prev), arrays, n_steps)
+            return out, (out[0], out[1], arrays)     # O(1) residuals
+        if not has_arrays:
+            return fwd_run((cur, prev), arrays, n_steps), None
+        # 1st order, variable coefficients: stack the per-step inputs
+        def body(carry, _):
+            nxt = fwd_run(carry, arrays, 1)
+            return nxt, carry[0]
+        out, curs = jax.lax.scan(body, (cur, prev), None, length=n_steps)
+        return out, (curs, arrays)
+
+    def bwd_first_order(res, cot):
+        curs, arrays = res if res is not None else (None, None)
+        gc, gp = cot
+        adj_arrays, adj_scalars = adj.map_coeffs(arrays, scalars)
+
+        def step(carry, cur_in):
+            G, P = carry[0], carry[1]
+            ghat = _zero_frame(G, r)
+            out = adj_run((ghat, ghat), adj_arrays, adj_scalars)[0]
+            g_new = (out + _frame_shell(adj, adj_arrays, adj_scalars, ghat)
+                     + _frame_only(G, r) + P)
+            new_carry = (g_new, jnp.zeros_like(P))
+            if has_arrays:
+                da = _coeff_grads(op, cur_in, ghat, arrays, scalars)
+                new_carry += (carry[2] + da,)
+            return new_carry, None
+
+        init = (gc, gp)
+        if has_arrays:
+            init += (jnp.zeros_like(arrays),)
+        carry, _ = jax.lax.scan(step, init, curs, length=n_steps,
+                                reverse=True)
+        g_arrays = carry[2] if has_arrays else None
+        return carry[0], jnp.zeros_like(gp), g_arrays
+
+    def bwd_second_order(res, cot):
+        u, v, arrays = res                   # (U_N, U_{N-1})
+        gc, gp = cot
+        adj_arrays, adj_scalars = adj.map_coeffs(arrays, scalars)
+
+        def step(carry, _):
+            u, v, G, P = carry[:4]
+            ghat = _zero_frame(G, r)
+            out = adj_run((ghat, -P), adj_arrays, adj_scalars)[0]
+            g_new = (out + _frame_shell(adj, adj_arrays, adj_scalars, ghat)
+                     + _frame_only(G + P, r))
+            # time-symmetric reconstruction: the forward kernel on the
+            # swapped state yields U_{t-2} from (U_t, U_{t-1})
+            u_back = fwd_run((v, u), arrays, 1)[0]
+            new_carry = (v, u_back, g_new, -ghat)
+            if has_arrays:
+                da = _coeff_grads(op, v, ghat, arrays, scalars)
+                new_carry += (carry[4] + da,)
+            return new_carry, None
+
+        init = (u, v, gc, gp)
+        if has_arrays:
+            init += (jnp.zeros_like(arrays),)
+        carry, _ = jax.lax.scan(step, init, None, length=n_steps)
+        G0, P0 = carry[2], carry[3]
+        g_arrays = carry[4] if has_arrays else None
+        # pull back through the entry frame sync (prev's frame := cur's)
+        return G0 + _frame_only(P0, r), _zero_frame(P0, r), g_arrays
+
+    bwd = bwd_second_order if op.time_order == 2 else bwd_first_order
+    advance.defvjp(fwd, bwd)
+    return jax.jit(advance)
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+def resolve_adjoint_plan(spec: StencilSpec, grid_shape, word_bytes: int = 4,
+                         batch: int = 1) -> tuple[MWDPlan, str]:
+    """Plan for the gradient launches of `spec`: registry-first, ``vjp`` key.
+
+    The registry is keyed on the ADJOINT operator (its own structural
+    fingerprint) under the ``vjp`` variant, so a tuned adjoint plan never
+    collides with the forward entry; a miss falls back to the analytic
+    model score of the adjoint op, whose stream count reflects the
+    transported coefficients.  Returns ``(plan, source)``.
+    """
+    from repro.core import registry
+    adj = ir.adjoint(spec)
+    return registry.resolve_plan(adj.op, grid_shape, word_bytes=word_bytes,
+                                 devices_x=1, batch=batch, variant="vjp")
+
+
+def _plans(spec, state, d_w, n_f, fused, plan, batch=1):
+    """-> ((d_w, n_f, fused) forward, (d_w, n_f, fused) adjoint)."""
+    fwd = (d_w, n_f, fused)
+    if plan is None:
+        return fwd, fwd
+    if isinstance(plan, MWDPlan):
+        fwd = (plan.d_w, plan.n_f, plan.fused)
+        return fwd, fwd               # same radius, same 2R | d_w constraint
+    if plan != "auto":
+        raise ValueError(f"plan must be an MWDPlan, 'auto' or None, "
+                         f"got {plan!r}")
+    from repro.core import registry
+    cur = state[0]
+    word = cur.dtype.itemsize
+    grid = cur.shape[-3:]
+    fp, _ = registry.resolve_plan(spec, grid, word_bytes=word, devices_x=1,
+                                  batch=batch)
+    ap, _ = resolve_adjoint_plan(spec, grid, word_bytes=word, batch=batch)
+    return (fp.d_w, fp.n_f, fp.fused), (ap.d_w, ap.n_f, ap.fused)
+
+
+def mwd_diff(spec: StencilSpec, state, coeffs, n_steps: int,
+             d_w: int = 8, n_f: int = 2, fused: bool = True,
+             plan: MWDPlan | str | None = None, dtype=None, acc="auto"):
+    """Differentiable fused MWD advance: `ops.mwd` with a structural VJP.
+
+    Forward-identical to `ops.mwd` (same kernels, same plan semantics); the
+    backward pass runs the structurally derived adjoint operator through
+    the same fused machinery (see the module docstring for the derivation
+    and residual policy).  Gradients flow to the solution levels and the
+    per-cell coefficient streams; compile-time scalar coefficients are
+    static (baked into the kernels) and carry no gradient.
+
+    plan="auto" resolves the forward plan registry-first as `ops.mwd` does
+    and the gradient-launch plan under the ``vjp`` variant key
+    (`resolve_adjoint_plan`); an explicit `MWDPlan` is used for both
+    directions (the adjoint shares the operator radius, so the same
+    geometry constraints apply).
+    """
+    if dtype is not None:
+        dt = precision.parse_dtype(dtype)
+        state = tuple(jnp.asarray(s, dt) for s in state)
+    if n_steps == 0:
+        return state[0], state[1]
+    fwd_p, adj_p = _plans(spec, state, d_w, n_f, fused, plan)
+    arrays, scalars = ir.split_coeffs(spec, coeffs)
+    scalars = tuple(float(x) for x in scalars)
+    if dtype is not None and arrays is not None:
+        arrays = jnp.asarray(arrays, dt)
+    acc_dt = precision.resolve_acc(state[0].dtype, acc)
+    fn = _diff_core(spec, scalars, n_steps, fwd_p, adj_p, acc_dt,
+                    batched=False)
+    return fn(state[0], state[1], arrays)
+
+
+def mwd_diff_batched(spec: StencilSpec, states, coeffs, n_steps: int,
+                     d_w: int = 8, n_f: int = 2, fused: bool = True,
+                     plan: MWDPlan | str | None = None, dtype=None,
+                     acc="auto"):
+    """Differentiable batched MWD advance (B grids, one launch, one VJP).
+
+    `states` is a stacked ``(cur, prev)`` pair of ``(B, nz, ny, nx)``
+    arrays or a sequence of B per-request pairs (stacked here, eagerly —
+    gradient workloads trace once and reuse); `coeffs` follows
+    `ops.mwd_batched`: a list of B per-request packed sets or one shared
+    set.  Returns batched ``(cur, prev)`` and differentiates like
+    `mwd_diff` with a leading batch axis everywhere.
+    """
+    dt = precision.parse_dtype(dtype) if dtype is not None else None
+    if (isinstance(states, (tuple, list)) and len(states) == 2
+            and getattr(states[0], "ndim", 0) == 4):
+        cur, prev = states
+    else:
+        cur = jnp.stack([s[0] for s in states])
+        prev = jnp.stack([s[1] for s in states])
+    if dt is not None:
+        cur, prev = jnp.asarray(cur, dt), jnp.asarray(prev, dt)
+    b = cur.shape[0]
+    if isinstance(coeffs, list):
+        if len(coeffs) != b:
+            raise ValueError(f"{spec.name}: got {len(coeffs)} coefficient "
+                             f"sets for a batch of {b}")
+        arrays, scalars = ir.split_coeffs_batch(spec, coeffs)
+        if arrays is not None:
+            arrays = jnp.stack(arrays)
+    else:
+        arrays, scalars = ir.split_coeffs(spec, coeffs)
+        scalars = tuple(float(x) for x in scalars)
+        if arrays is not None:
+            arrays = jnp.broadcast_to(arrays, (b,) + arrays.shape)
+    if dt is not None and arrays is not None:
+        arrays = jnp.asarray(arrays, dt)
+    if n_steps == 0:
+        return cur, prev
+    fwd_p, adj_p = _plans(spec, (cur, prev), d_w, n_f, fused, plan, batch=b)
+    acc_dt = precision.resolve_acc(cur.dtype, acc)
+    fn = _diff_core(spec, scalars, n_steps, fwd_p, adj_p, acc_dt,
+                    batched=True)
+    return fn(cur, prev, arrays)
+
+
+def distributed_vjp(spec: StencilSpec, mesh, state, coeffs, n_steps: int, *,
+                    t_block: int = 2, plan: MWDPlan | str | None = None):
+    """Distributed forward advance plus a manual VJP closure (eager).
+
+    Returns ``(outputs, vjp_fn)`` where `outputs` is the
+    `run_distributed` result and ``vjp_fn((g_cur, g_prev))`` produces
+    ``(d_cur, d_prev, d_arrays)`` — the same pullback recursion as
+    `mwd_diff`, executed as explicit ``n_steps=1, t_block=1`` distributed
+    steps of the adjoint operator (the reconstruction / residual policy per
+    time order carries over unchanged).  Eager by design: the stepper
+    places arrays on the mesh internally (`jax.device_put`), which cannot
+    run under `custom_vjp` tracing; gradient workloads at mesh scale call
+    this per optimization step instead of differentiating through a jit.
+    The frame/coefficient bookkeeping runs as host-level jnp on the
+    addressable global arrays (single-host meshes).
+    """
+    from repro.distributed import stepper
+
+    arrays, scalars = ir.split_coeffs(spec, coeffs)
+    scalars = tuple(float(x) for x in scalars)
+    adj = ir.adjoint(spec)
+    r = spec.radius
+    has_arrays = spec.n_coeff_arrays > 0
+
+    def one_step(op, pair, arrs, scs):
+        packed = ir.join_coeffs(op, arrs, scs)
+        return stepper.run_distributed(op, mesh, pair, packed, 1,
+                                       t_block=1, plan=plan)
+
+    curs = None
+    if spec.time_order == 1 and has_arrays:
+        curs, pair = [], tuple(state)
+        for _ in range(n_steps):            # stack the per-step inputs
+            curs.append(pair[0])
+            pair = one_step(spec, pair, arrays, scalars)
+        outs = pair
+    else:
+        outs = stepper.run_distributed(spec, mesh, tuple(state), coeffs,
+                                       n_steps, t_block=t_block, plan=plan)
+
+    def vjp_fn(cot):
+        G, P = (jnp.asarray(g) for g in cot)
+        adj_arrays, adj_scalars = adj.map_coeffs(arrays, scalars)
+        g_arrays = jnp.zeros_like(arrays) if has_arrays else None
+        u, v = outs
+        for t in range(n_steps, 0, -1):
+            ghat = _zero_frame(G, r)
+            if spec.time_order == 2:
+                out = one_step(adj.op, (ghat, -P), adj_arrays,
+                               adj_scalars)[0]
+                g_new = (out
+                         + _frame_shell(adj, adj_arrays, adj_scalars, ghat)
+                         + _frame_only(G + P, r))
+                if has_arrays:
+                    g_arrays = g_arrays + _coeff_grads(spec, v, ghat,
+                                                       arrays, scalars)
+                u, v = v, one_step(spec, (v, u), arrays, scalars)[0]
+                G, P = g_new, -ghat
+            else:
+                out = one_step(adj.op, (ghat, ghat), adj_arrays,
+                               adj_scalars)[0]
+                g_new = (out
+                         + _frame_shell(adj, adj_arrays, adj_scalars, ghat)
+                         + _frame_only(G, r) + P)
+                if has_arrays:
+                    g_arrays = g_arrays + _coeff_grads(spec, curs[t - 1],
+                                                       ghat, arrays, scalars)
+                G, P = g_new, jnp.zeros_like(P)
+        return G + _frame_only(P, r), _zero_frame(P, r), g_arrays
+
+    return outs, vjp_fn

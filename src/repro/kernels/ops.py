@@ -25,6 +25,10 @@ from repro.core.mwd import MWDPlan
 from repro.core.stencils import StencilSpec
 from repro.kernels import ref as _ref
 from repro.kernels import stencil_fused, stencil_mwd, stencil_sweep
+from repro.kernels.adjoint import mwd_diff, mwd_diff_batched  # noqa: F401
+# mwd_diff / mwd_diff_batched: forward-identical to mwd / mwd_batched with a
+# structural custom_vjp (repro.kernels.adjoint) — the differentiable entry
+# points the training stack and `launch.fit` drive.
 
 ref = _ref
 

@@ -25,7 +25,11 @@ def warmup_cosine(peak_lr: float, warmup: int = 100, total: int = 10000,
                   floor: float = 0.1):
     def lr(step):
         step = jnp.asarray(step, jnp.float32)
-        warm = peak_lr * (step + 1) / warmup
+        # warmup=0 must mean "no warmup", not a division by zero: the
+        # step < warmup branch is then never taken, but jnp.where still
+        # evaluates both sides, so an unguarded divide poisons every lr
+        # with inf/nan
+        warm = peak_lr * (step + 1) / max(warmup, 1)
         frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
         cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
         return jnp.where(step < warmup, warm, cos)

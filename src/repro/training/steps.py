@@ -72,6 +72,31 @@ def make_train_step(cfg: ArchConfig, *, lr=None, aux_weight: float = 0.01,
     return opt, train_step
 
 
+def make_fit_step(opt, loss_fn, *, clip: float = 1.0):
+    """Generic single-program fit step for non-LM objectives.
+
+    `loss_fn(params, *args) -> (loss, aux_dict)`; `opt` an
+    `repro.optim.Optimizer`.  Returns ``fit_step(state, *args) ->
+    (new_state, metrics)`` over the same ``{"params", "opt", "step"}``
+    state dict the LM train step uses, so checkpointing and telemetry
+    treat both identically.  This is what `launch.fit` drives: the loss
+    closes over a differentiable stencil advance (`ops.mwd_diff`) and
+    `params` is the coefficient field being recovered.
+    """
+    def fit_step(state, *args):
+        params, opt_state, step = state["params"], state["opt"], state["step"]
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, *args)
+        grads, gnorm = clip_by_global_norm(grads, clip)
+        updates, new_opt = opt.update(grads, opt_state, params, step)
+        new_params = apply_updates(params, updates)
+        metrics = dict(aux, loss=loss, grad_norm=gnorm)
+        return ({"params": new_params, "opt": new_opt, "step": step + 1},
+                metrics)
+
+    return fit_step
+
+
 def make_serve_step(cfg: ArchConfig):
     def serve_step(params, cache, tokens):
         logits, new_cache = lm.decode_step(cfg, params, cache, tokens)

@@ -68,6 +68,43 @@ def test_warmup_cosine_schedule():
     assert float(lr(99)) < float(lr(50)) < float(lr(10)) + 1e-6
 
 
+def test_warmup_cosine_zero_warmup_is_finite():
+    # regression: jnp.where evaluates BOTH branches, so warmup=0 used to
+    # divide by zero and poison every lr with inf/nan even though the
+    # warmup branch is never selected
+    lr = warmup_cosine(1.0, warmup=0, total=100)
+    vals = [float(lr(s)) for s in (0, 1, 50, 99)]
+    assert all(np.isfinite(v) for v in vals), vals
+    assert abs(vals[0] - 1.0) < 1e-6        # no warmup: peak immediately
+    jitted = float(jax.jit(lr)(0))
+    assert np.isfinite(jitted) and abs(jitted - 1.0) < 1e-6
+
+
+def test_train_step_gradient_accumulation_smoke():
+    from repro import configs
+    from repro.training import steps
+
+    cfg = configs.reduced(configs.get("gemma3-1b"))
+    from repro.models import lm
+    from repro.models.params import tree_init
+
+    params = tree_init(lm.param_specs(cfg), seed=1)
+    rng = np.random.default_rng(0)
+    b, s = 2, 32
+    batch = {"tokens": jnp.asarray(
+                 rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32),
+             "labels": jnp.asarray(
+                 rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)}
+    _, train = steps.make_train_step(cfg, chunk=16, accum=2)
+    state = {"params": params,
+             "opt": steps.make_optimizer(cfg.optimizer).init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    state, metrics = jax.jit(train)(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    assert int(state["step"]) == 1
+
+
 def test_make_optimizer_rejects_unknown():
     with pytest.raises(ValueError):
         make_optimizer("sgd9000")
